@@ -1,0 +1,32 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (stdout) and mirrors rows into
+bench_results.json for the experiment index.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks.paper_benches import ALL_BENCHES
+
+    rows = []
+    print("name,us_per_call,derived")
+    for bench in ALL_BENCHES:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+                rows.append({"name": name, "us_per_call": us, "derived": derived})
+        except Exception as e:  # noqa: BLE001 -- report and continue
+            print(f"{bench.__name__},NaN,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+            rows.append({"name": bench.__name__, "error": str(e)})
+    with open("bench_results.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Batched serving example: KV-cache decode over a request batch.
+
+    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --arch zamba2-2.7b
+
+Serves the (smoke-sized) model with a batch of prompts through the same
+decode_step the decode_32k / long_500k dry-run cells lower -- full KV cache
+for GQA archs, rolling window for SWA, latent cache for MLA, recurrent
+state for SSM/hybrid.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.registry import build_model
+from repro.runtime.serve import ServeConfig, batch_requests, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=rng.integers(3, 9)).tolist()
+               for _ in range(args.batch)]
+    batch, lens = batch_requests(prompts)
+    print(f"arch={cfg.name}: serving {len(prompts)} requests, "
+          f"prompt lens {lens.tolist()}")
+
+    sc = ServeConfig(max_new_tokens=args.max_new, max_seq=128)
+    t0 = time.perf_counter()
+    out = generate(model, params, batch, sc)
+    dt = time.perf_counter() - t0
+    new_tokens = args.max_new * len(prompts)
+    print(f"generated {new_tokens} tokens in {dt:.2f}s "
+          f"({new_tokens/dt:.1f} tok/s incl. compile)")
+    for i, row in enumerate(out):
+        print(f"req{i}: ...{row[-args.max_new:].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Sharded numpy checkpoints with manifest, atomic rename, async writer,
+and elastic restore (a checkpoint written on one mesh restores onto any
+other mesh: arrays are saved unsharded and re-placed per the declared
+PartitionSpecs at load).
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json ; <dir>/LATEST points at
+the newest complete step (written last, so a crash mid-write never corrupts
+the restore path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "//"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    """numpy has no bfloat16: exotic dtypes are saved as uint16/uint8 views
+    with the true dtype recorded in ``__dtypes__`` for restore."""
+    flat = {}
+    dtypes = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path
+        )
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype) \
+                or "float8" in str(arr.dtype):
+            dtypes[key] = str(arr.dtype)
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+        flat[key] = arr
+    flat["__dtypes__"] = np.frombuffer(
+        json.dumps(dtypes).encode(), dtype=np.uint8
+    )
+    return flat
+
+
+def _unflatten_into(template: Any, arrays: Dict[str, np.ndarray]) -> Any:
+    dtypes = {}
+    if "__dtypes__" in arrays:
+        dtypes = json.loads(bytes(arrays["__dtypes__"]).decode())
+    paths_leaves = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves[0]:
+        key = _SEP.join(
+            str(getattr(e, "key", getattr(e, "idx", e))) for e in path
+        )
+        arr = arrays[key]
+        want = dtypes.get(key)
+        if want and str(arr.dtype) != want:
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(paths_leaves[1], leaves)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+    """Blocking save; returns the step directory."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+    os.makedirs(tmp_dir, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp_dir, "arrays.npz"), **flat)
+    manifest = {"step": step, "num_arrays": len(flat), **(extra or {})}
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)  # idempotent re-save of the same step
+    os.replace(tmp_dir, step_dir)
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(step_dir))
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+               os.path.join(ckpt_dir, "LATEST"))
+    return step_dir
+
+
+class AsyncWriter:
+    """One-in-flight background checkpoint writer (device_get happens on the
+    caller thread so the training arrays are snapshotted synchronously; only
+    file IO is off-thread)."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, ckpt_dir: str, step: int, tree: Any, extra=None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=save, args=(ckpt_dir, step, host_tree, extra), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    path = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        name = f.read().strip()
+    return int(name.split("_")[-1])
+
+
+def restore(
+    ckpt_dir: str, template: Any, step: Optional[int] = None,
+    place: Optional[Callable[[Any], Any]] = None,
+) -> Tuple[int, Any]:
+    """Load into the structure of ``template``; ``place`` re-shards each
+    restored tree onto the current mesh (elastic restore)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    assert step is not None, f"no checkpoint under {ckpt_dir}"
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(step_dir, "arrays.npz")) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    tree = _unflatten_into(template, arrays)
+    if place is not None:
+        tree = place(tree)
+    return step, tree

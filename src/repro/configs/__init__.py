@@ -1,0 +1,92 @@
+"""Architecture configs: one module per assigned architecture.
+
+``get_config(name)`` returns the exact published configuration;
+``get_smoke_config(name)`` a reduced same-family config for CPU smoke tests.
+``SHAPES`` defines the assigned input-shape cells; ``runnable_cells()``
+enumerates the (arch x shape) grid minus the documented skips
+(DESIGN.md Sec. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "llama3_2_1b",
+    "granite_20b",
+    "minicpm3_4b",
+    "h2o_danube3_4b",
+    "chameleon_34b",
+    "qwen3_moe_30b_a3b",
+    "deepseek_moe_16b",
+    "seamless_m4t_medium",
+    "xlstm_350m",
+    "zamba2_2_7b",
+)
+
+# canonical ids from the assignment -> module names
+ALIASES = {
+    "llama3.2-1b": "llama3_2_1b",
+    "granite-20b": "granite_20b",
+    "minicpm3-4b": "minicpm3_4b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "chameleon-34b": "chameleon_34b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "xlstm-350m": "xlstm_350m",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic decode; DESIGN.md Sec. 5)
+LONG_CONTEXT_OK = {"xlstm_350m", "zamba2_2_7b", "h2o_danube3_4b"}
+
+
+def canonical(name: str) -> str:
+    return ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.SMOKE
+
+
+def runnable_cells() -> List[Tuple[str, str]]:
+    cells = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+                continue
+            cells.append((arch, shape))
+    return cells
+
+
+def skipped_cells() -> List[Tuple[str, str, str]]:
+    return [
+        (arch, "long_500k", "full-attention arch: 500k dense-KV decode is not sub-quadratic")
+        for arch in ARCHS if arch not in LONG_CONTEXT_OK
+    ]

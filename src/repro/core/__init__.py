@@ -1,0 +1,21 @@
+"""repro.core -- the paper's contribution: symmetry-derived schedules.
+
+Public surface:
+  groups         -- cyclic/product/permutation/wreath groups, hex lattice
+  homomorphism   -- generator-image homomorphisms + Lemmas 3-5 checks
+  schedule       -- TorusSchedule / Torus25DSchedule equivariant maps
+  solver         -- enumerate & rank schedules (recovers Cannon et al.)
+  cost           -- word/time costs, lower bounds, TPU constants
+  fattree        -- recursive wreath-product schedules (Sec. 4.2)
+  hexarray       -- systolic hex-array schedule + simulator (Sec. D.2)
+  zorder         -- space-bounded schedules as Morton orders (Sec. 4.3)
+"""
+from . import cost, fattree, groups, hexarray, homomorphism, schedule, solver, zorder
+from .schedule import TorusSchedule, Torus25DSchedule, cannon_schedule, torus_hops
+from .solver import Solution, solve_torus, minimal_hop_cost, is_cannon_like
+
+__all__ = [
+    "cost", "fattree", "groups", "hexarray", "homomorphism", "schedule",
+    "solver", "zorder", "TorusSchedule", "Torus25DSchedule", "cannon_schedule",
+    "torus_hops", "Solution", "solve_torus", "minimal_hop_cost", "is_cannon_like",
+]

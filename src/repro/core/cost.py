@@ -1,0 +1,116 @@
+"""Time and communication costs for schedules (Sec. 2.4) + lower bounds.
+
+Costs are *words moved* and *time steps*, exactly as the paper assigns them:
+a schedule's communication cost is the per-step hop count of each variable
+set's movement homomorphism mu, times the number of variables, times the
+number of steps; time cost is the flattened |T| (rho_T stretching).
+
+Also provides the classical lower bounds the paper cites ([20] Irony-Toledo-
+Tiskin, [11] Christ et al.):  per-node bandwidth  Omega(n^3 / (p sqrt(M))),
+and the memory-independent  Omega(n^2 / p^{2/3}).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from .schedule import TorusSchedule, Torus25DSchedule, torus_hops
+
+
+@dataclasses.dataclass(frozen=True)
+class CommReport:
+    words_total: float          # words crossing links, summed over steps
+    words_per_node: float
+    steps: int
+    per_variable: Dict[str, float]
+
+
+def torus_schedule_cost(sched: TorusSchedule, n: int) -> CommReport:
+    """Blocked execution of an n x n x n multiply on the q x q torus under
+    ``sched`` (paper Sec. 4.1 blocked variant): each node holds one
+    (n/q) x (n/q) block per variable; each time step moves each variable set
+    by mu (hop count x q^2 blocks x block words)."""
+    q = sched.q
+    block_words = (n / q) ** 2
+    steps = sched.t
+    per_var = {}
+    total = 0.0
+    for v in ("A", "B", "C"):
+        mv = sched.movement(v)
+        hops = torus_hops(mv, q) if mv is not None else float("inf")
+        words = hops * block_words * q * q * max(steps - 1, 0)
+        per_var[v] = words
+        total += words
+    return CommReport(
+        words_total=total,
+        words_per_node=total / (q * q),
+        steps=steps,
+        per_variable=per_var,
+    )
+
+
+def cannon_comm_total(n: int, p: int) -> float:
+    """Paper's closed form: blocked Cannon on sqrt(p) x sqrt(p) nodes moves
+    ~ 2 * sqrt(p) * p * (n^2/p) = 2 n^2 sqrt(p) words (A and B each one hop
+    per step; the paper quotes 3 n^2 sqrt(p) counting all three sets)."""
+    return 2.0 * n * n * math.sqrt(p)
+
+
+def schedule_25d_cost(sched: Torus25DSchedule, n: int) -> CommReport:
+    q, c, t = sched.q, sched.c, sched.t
+    p = q * q * c
+    block_words = (n / q) ** 2
+    shift = 2 * block_words * q * q * c * max(t - 1, 0)  # A,B one-hop in-layer
+    repl = 2 * block_words * q * q * (c - 1)  # broadcast copies over z
+    red = block_words * q * q * (c - 1)  # reduce C over z
+    total = shift + repl + red
+    return CommReport(
+        words_total=total,
+        words_per_node=total / p,
+        steps=t,
+        per_variable={"shift": shift, "replicate": repl, "reduce": red},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Lower bounds
+# ---------------------------------------------------------------------------
+
+
+def bandwidth_lower_bound(n: int, p: int, M: float) -> float:
+    """Irony-Toledo-Tiskin [20]: words per node >= n^3/(2*sqrt(2)*p*sqrt(M)) - M."""
+    return max(n**3 / (2 * math.sqrt(2) * p * math.sqrt(M)) - M, 0.0)
+
+
+def memory_independent_lower_bound(n: int, p: int) -> float:
+    """[11]: words per node >= c * n^2 / p^(2/3)."""
+    return n * n / (p ** (2.0 / 3.0))
+
+
+def optimal_replication(n: int, p: int, M: float) -> int:
+    """The 2.5D sweet spot c = p*M/(3n^2) clamped to [1, p^(1/3)]."""
+    c = p * M / (3.0 * n * n)
+    return max(1, min(int(c), int(round(p ** (1.0 / 3.0)))))
+
+
+# ---------------------------------------------------------------------------
+# TPU hardware constants (v5e targets used across roofline + cost model)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link (one direction)
+VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB v5e vector memory
+MXU_DIM = 128             # systolic array tile edge
+
+
+def matmul_time_model(m: int, n: int, k: int, dtype_bytes: int = 2) -> Dict[str, float]:
+    """Single-chip roofline terms for an (m,k)x(k,n) matmul."""
+    flops = 2.0 * m * n * k
+    bytes_moved = dtype_bytes * (m * k + k * n + m * n)
+    return {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": bytes_moved / HBM_BW,
+        "arithmetic_intensity": flops / bytes_moved,
+    }

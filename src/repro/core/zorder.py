@@ -1,0 +1,112 @@
+"""Space-bounded / cache-oblivious schedules as Z-order traversals (Sec. 4.3).
+
+The paper's parallel-memory-hierarchy schedule is equivariant with an
+iterated-wreath-product homomorphism that lifts low-order index bits to small
+time steps -- i.e. a Z-order (Morton) traversal of the (i, j, k) block index
+space, executing the largest sub-multiplication that fits each cache level
+contiguously.  On TPU the "cache" is VMEM: the Pallas matmul kernel in
+``repro.kernels.matmul`` consumes these orders as its grid ``index_map``.
+
+Also provides the analytic cache-miss/traffic model used by the
+space-bounded benchmark: Z-order achieves the O(n^3 / sqrt(M)) transfer bound
+at every level (cache-oblivious, Frigo et al. [16]); row-major does not.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterator, List, Tuple
+
+
+def morton_decode3(code: int) -> Tuple[int, int, int]:
+    """De-interleave bits code -> (i, j, k); bit 0 -> k, bit 1 -> j, bit 2 -> i."""
+    i = j = k = 0
+    bit = 0
+    while code:
+        k |= (code & 1) << bit
+        j |= ((code >> 1) & 1) << bit
+        i |= ((code >> 2) & 1) << bit
+        code >>= 3
+        bit += 1
+    return i, j, k
+
+
+def morton_encode3(i: int, j: int, k: int) -> int:
+    out = 0
+    bit = 0
+    while i or j or k:
+        out |= (k & 1) << (3 * bit)
+        out |= (j & 1) << (3 * bit + 1)
+        out |= (i & 1) << (3 * bit + 2)
+        i >>= 1
+        j >>= 1
+        k >>= 1
+        bit += 1
+    return out
+
+
+def zorder_schedule(gi: int, gj: int, gk: int) -> List[Tuple[int, int, int]]:
+    """Z-order traversal of a (gi, gj, gk) block grid (grid dims need not be
+    powers of two: we enumerate the enclosing power-of-two cube and filter --
+    order preserved, cost identical on the valid region)."""
+    side = 1 << max(gi - 1, gj - 1, gk - 1, 0).bit_length() if max(gi, gj, gk) > 1 else 1
+    while side < max(gi, gj, gk):
+        side <<= 1
+    out = []
+    for code in range(side ** 3):
+        i, j, k = morton_decode3(code)
+        if i < gi and j < gj and k < gk:
+            out.append((i, j, k))
+    assert len(out) == gi * gj * gk
+    return out
+
+
+def rowmajor_schedule(gi: int, gj: int, gk: int) -> List[Tuple[int, int, int]]:
+    return [(i, j, k) for i in range(gi) for j in range(gj) for k in range(gk)]
+
+
+def block_reuse_distance_traffic(
+    order: List[Tuple[int, int, int]], cache_blocks: int
+) -> int:
+    """LRU-model traffic: number of (variable, block) fetches that miss an
+    LRU cache holding ``cache_blocks`` blocks, where step (i,j,k) touches
+    blocks A[i,k_? ] -- here A(i,j), B(j,k), C(i,k) in block units.
+
+    This is the machine side of Sec. 4.3: the space-bounded schedule's
+    traffic at a level of size M is O(#steps / sqrt(M)) block fetches."""
+    from collections import OrderedDict
+
+    lru: "OrderedDict[Tuple[str, int, int], None]" = OrderedDict()
+    misses = 0
+    for (i, j, k) in order:
+        for key in (("A", i, j), ("B", j, k), ("C", i, k)):
+            if key in lru:
+                lru.move_to_end(key)
+            else:
+                misses += 1
+                lru[key] = None
+                if len(lru) > cache_blocks:
+                    lru.popitem(last=False)
+    return misses
+
+
+def ideal_traffic(num_steps: int, cache_blocks: int) -> float:
+    """O(steps / sqrt(M)) transfer bound (blocks) for matmul at cache size M."""
+    return 3.0 * num_steps / math.sqrt(max(cache_blocks // 3, 1))
+
+
+def zorder_grid_index_map(gi: int, gj: int, gk: int):
+    """Return index_map(step) -> (i, j, k) for a 1-D Pallas grid of size
+    gi*gj*gk traversed in Z-order.  Implemented as a table lookup closed over
+    the precomputed order (static at trace time)."""
+    order = zorder_schedule(gi, gj, gk)
+    return lambda s: order[s]
+
+
+def supersteps(gi: int, gj: int, gk: int, level_bits: int) -> Iterator[List[Tuple[int, int, int]]]:
+    """Partition the Z-order traversal into supersteps of 8^level_bits blocks
+    (the paper's T = T_1 x ... x T_k multi-granularity time); each superstep
+    is a sub-multiplication fitting one cache level."""
+    order = zorder_schedule(gi, gj, gk)
+    size = 8 ** level_bits
+    for s in range(0, len(order), size):
+        yield order[s : s + size]

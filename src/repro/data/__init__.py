@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, batch_iterator, device_put_batch, synth_batch
+
+__all__ = ["DataConfig", "batch_iterator", "device_put_batch", "synth_batch"]

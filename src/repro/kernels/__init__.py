@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+  matmul          -- Z-order (space-bounded, Sec. 4.3) blocked matmul
+  flash_attention -- online-softmax attention for long-context prefill
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in
+interpret mode against the oracle.
+"""
+from . import flash_attention, matmul
+
+__all__ = ["flash_attention", "matmul"]

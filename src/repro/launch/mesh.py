@@ -1,0 +1,16 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax use).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (v5e full pod); 2 pods = 512 chips when
+    multi_pod.  Axes: (pod,) data, model."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

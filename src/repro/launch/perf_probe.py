@@ -1,0 +1,98 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede all other imports (jax locks device count on first init).
+
+"""Perf-iteration probe: lower ONE cell with config overrides and print the
+three roofline terms + per-kind collective bytes.  The Sec.-Perf hillclimb
+driver: each hypothesis -> change -> measure cycle is one invocation.
+
+    PYTHONPATH=src python -m repro.launch.perf_probe \
+        --arch granite-20b --shape train_4k \
+        --set remat=none attn_probs_dtype=bf16 --no-zero --tag it3
+
+Overrides apply dataclasses.replace on the arch config; measurement always
+uses the final analyzer (invariant-aware by default; --naive-analyzer for
+the pessimistic count).  Appends a JSON record to perf_iterations.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import canonical, get_config
+from repro.launch.dryrun import lower_cell, _batch_shardings, _rep  # noqa
+from repro.launch.mesh import make_production_mesh
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--set", nargs="*", default=[], metavar="key=val")
+    ap.add_argument("--remat", default="config")
+    ap.add_argument("--no-zero", action="store_true")
+    ap.add_argument("--naive-analyzer", action="store_true")
+    ap.add_argument("--tag", default="probe")
+    ap.add_argument("--out", default="perf_iterations.json")
+    args = ap.parse_args()
+
+    overrides = dict(parse_override(kv) for kv in args.set)
+
+    # monkey-patch get_config so lower_cell sees the overridden config
+    import repro.launch.dryrun as dr
+    base_get = dr.get_config
+
+    def patched(name):
+        cfg = base_get(name)
+        return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+    dr.get_config = patched
+
+    if args.naive_analyzer:
+        import repro.roofline.hlo_stats as hs
+        orig = hs.analyze
+        hs.analyze = lambda text, invariant_aware=True: orig(text, False)
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    t0 = time.perf_counter()
+    rec = lower_cell(canonical(args.arch), args.shape, mesh,
+                     remat=args.remat, zero=not args.no_zero)
+    rec.update(tag=args.tag, overrides=overrides, zero=not args.no_zero,
+               remat=args.remat, analyzer="naive" if args.naive_analyzer
+               else "invariant-aware", wall_s=round(time.perf_counter() - t0, 1))
+    r = rec["roofline"]
+    print(json.dumps({
+        "tag": args.tag, "arch": rec["arch"], "shape": rec["shape"],
+        "dominant": r["dominant"],
+        "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"], "step_bound_s": r["step_s_bound"],
+        "roofline_fraction": r["roofline_fraction"],
+        "coll_by_kind": r["coll_by_kind"],
+        "peak_GiB": round((rec["memory"]["peak_bytes"] or 0) / 2**30, 2),
+    }, indent=1))
+    hist = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            hist = json.load(f)
+    hist.append(rec)
+    with open(args.out, "w") as f:
+        json.dump(hist, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

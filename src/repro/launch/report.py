@@ -1,0 +1,81 @@
+"""Emit EXPERIMENTS.md tables from the dry-run / perf-iteration JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun_results_v3.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def fmt(x, digits=3):
+    if x is None:
+        return "-"
+    return f"{x:.{digits}e}" if (abs(x) < 1e-3 or abs(x) >= 1e4) else f"{x:.{digits}f}"
+
+
+def roofline_table(cells, mesh_filter="16x16"):
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "peak GiB | MODEL_FLOPS | useful frac | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c["mesh"] != mesh_filter or not c.get("ok"):
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt(r['compute_s'])} | "
+            f"{fmt(r['memory_s'])} | {fmt(r['collective_s'])} | "
+            f"{r['dominant']} | {fmt_bytes(c['memory']['peak_bytes'])} | "
+            f"{fmt(r['model_flops'])} | {fmt(r.get('useful_flops_fraction'))} | "
+            f"{fmt(r.get('roofline_fraction'), 4)} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(cells):
+    rows = [
+        "| arch | shape | mesh | compile s | peak GiB/dev | fits 16G | "
+        "coll bytes/dev | AG | AR | RS | A2A | CP |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if not c.get("ok"):
+            continue
+        r = c["roofline"]
+        k = r["coll_by_kind"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['compile_s']} | "
+            f"{fmt_bytes(c['memory']['peak_bytes'])} | "
+            f"{'Y' if c['memory'].get('fits_hbm_16g') else 'N'} | "
+            f"{fmt(r['collective_bytes_per_chip'])} | "
+            f"{fmt(k.get('all-gather'))} | {fmt(k.get('all-reduce'))} | "
+            f"{fmt(k.get('reduce-scatter'))} | {fmt(k.get('all-to-all'))} | "
+            f"{fmt(k.get('collective-permute'))} |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results_v2.json"
+    with open(path) as f:
+        data = json.load(f)
+    cells = data["cells"]
+    print("### Roofline (single-pod 16x16)\n")
+    print(roofline_table(cells, "16x16"))
+    print("\n### Dry-run record (both meshes)\n")
+    print(dryrun_table(cells))
+    print("\n### Skipped cells\n")
+    for arch, shape, why in data.get("skipped", []):
+        print(f"* {arch} x {shape}: {why}")
+
+
+if __name__ == "__main__":
+    main()

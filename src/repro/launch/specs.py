@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape)`` returns the abstract batch for the given
+shape cell; ``abstract_state``/``abstract_cache`` build the abstract
+parameter/optimizer/cache trees via eval_shape.  Audio/VLM frontends are
+stubs: seamless gets precomputed frame embeddings, chameleon gets
+interleaved text+VQ token ids (early fusion shares the vocabulary).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models.config import ModelConfig
+from repro.models.registry import build_model
+
+SRC_FRAMES_32K = 4096   # seamless encoder frames for the prefill/train cells
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+    if cell.kind == "train":
+        batch = {"tokens": tok(b, s), "labels": tok(b, s)}
+        if cfg.family == "audio":
+            batch["src_embed"] = jax.ShapeDtypeStruct(
+                (b, min(s, SRC_FRAMES_32K), cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    if cell.kind == "prefill":
+        batch = {"tokens": tok(b, s)}
+        if cfg.family == "audio":
+            batch["src_embed"] = jax.ShapeDtypeStruct(
+                (b, min(s, SRC_FRAMES_32K), cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    if cell.kind == "decode":
+        return {"tokens": tok(b, 1), "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(cell.kind)
+
+
+def abstract_params(cfg: ModelConfig):
+    model = build_model(cfg)
+    return model, jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_cache(model, cfg: ModelConfig, shape: str):
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.family == "audio":
+        return jax.eval_shape(
+            lambda: model.init_cache(b, s, src_len=SRC_FRAMES_32K)
+        )
+    return jax.eval_shape(lambda: model.init_cache(b, s))
+
+
+def abstract_opt_state(params):
+    from repro.optim import adamw
+    return jax.eval_shape(adamw.init, params)

@@ -1,0 +1,1 @@
+"""Functional layer library (params = pytrees; scan-over-layers friendly)."""

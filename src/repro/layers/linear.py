@@ -1,0 +1,18 @@
+"""Linear layers routed through the symmetry-scheduled matmul engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_params(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
+    scale = 1.0 / (d_in ** 0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x @ w with fp32 accumulation.  The GSPMD baseline path: sharding of w
+    (and hence the collective schedule) comes from the param PartitionSpecs;
+    ring strategies replace this call inside shard_map blocks (see
+    repro.dist.api.symmetric_matmul)."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

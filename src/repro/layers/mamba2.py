@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD) layer: chunked matmul formulation + O(1) decode.
+
+The chunked state-space-dual algorithm is MXU-shaped on purpose: within a
+chunk of length L the output is a masked (L x L) matmul, and chunk-to-chunk
+state is a rank-L update -- i.e. exactly the paper's blocked schedule story
+applied to a recurrence (the chunk length plays the role of the time
+superstep T_l).  Scalar-per-head decay (Mamba-2's simplification) keeps the
+decay algebra in the exponent domain.
+
+Shapes: d_in = expand * d_model; H = d_in / headdim heads; state N.
+B_t and C_t are shared across heads (n_groups = 1).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .linear import linear, linear_params
+from .norms import rms_norm, rms_norm_params
+
+Params = Dict[str, jax.Array]
+Cache = Dict[str, jax.Array]
+
+
+def mamba2_params(key, cfg, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = din // cfg.ssm_headdim
+    kconv = cfg.conv_kernel
+    ks = jax.random.split(key, 6)
+    conv_ch = din + 2 * n
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "in_proj": linear_params(ks[0], d, 2 * din + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (kconv, conv_ch), jnp.float32)
+                   * (1.0 / kconv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rms_norm_params(din),
+        "out_proj": linear_params(ks[2], din, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # K is 4: unrolled taps stay fused
+        out = out + xp[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssd_chunk_scan(xh, dt, Bm, Cm, A, chunk: int, gate_dtype=None):
+    """Chunked SSD. xh: (B, S, H, P); dt: (B, S, H); Bm, Cm: (B, S, N);
+    A: (H,) negative.  Returns y: (B, S, H, P) and final state (B, H, P, N)."""
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    pad = (-s) % chunk
+    if pad:  # trailing zero-pad is causal-safe; outputs sliced back below
+        z = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        xh, dt, Bm, Cm = z(xh), z(dt), z(Bm), z(Cm)
+        s_orig, s = s, s + pad
+    else:
+        s_orig = s
+    nc = s // chunk
+    L = chunk
+
+    # reshape to chunks, scan axis first
+    def toc(t):
+        return t.reshape(b, nc, L, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, Bc, Cc = toc(xh), toc(dt), toc(Bm), toc(Cm)
+    la = dtc.astype(jnp.float32) * A  # (nc, B, L, H): log decay per step
+
+    def body(hstate, args):
+        xk, dtk, Bk, Ck, lak = args
+        # cumulative log decay within chunk (inclusive)
+        cum = jnp.cumsum(lak, axis=1)                       # (B, L, H)
+        # intra-chunk: y_i = sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+        scores = jnp.einsum("bin,bjn->bij", Ck.astype(jnp.float32),
+                            Bk.astype(jnp.float32))          # (B, L, L)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]      # (B, L, L, H)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        gate = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        w = scores[..., None] * gate * dtk[:, None, :, :]    # (B, L, L, H)
+        if gate_dtype is not None:
+            w = w.astype(gate_dtype)
+        y = jnp.einsum("bijh,bjhp->bihp", w, xk.astype(w.dtype),
+                       preferred_element_type=jnp.float32)
+        # inter-chunk: y_i += exp(cum_i) * C_i . h_prev
+        y = y + jnp.einsum(
+            "bin,bhpn,bih->bihp", Ck.astype(jnp.float32), hstate,
+            jnp.exp(cum),
+        )
+        # state update: h = exp(cum_L) h_prev + sum_j exp(cum_L - cum_j) dt_j B_j x_j
+        tot = cum[:, -1:, :]                                 # (B, 1, H)
+        carry_decay = jnp.exp(tot - cum)                     # (B, L, H)
+        hnew = jnp.einsum(
+            "bjh,bjn,bjhp->bhpn",
+            carry_decay * dtk, Bk.astype(jnp.float32), xk.astype(jnp.float32),
+        )
+        hstate = hstate * jnp.exp(tot[:, 0, :])[:, :, None, None] + hnew
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hfin, yc = jax.lax.scan(body, h0, (xc, dtc, Bc, Cc, la))
+    y = yc.swapaxes(0, 1).reshape(b, s, h, p)[:, :s_orig]
+    return y, hfin
+
+
+def mamba2(
+    p: Params, x: jax.Array, cfg,
+    cache: Optional[Cache] = None,
+    pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Cache]]:
+    """x: (B, S, d_model).  cache (decode): conv state + ssm state."""
+    b, s, d = x.shape
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = din // cfg.ssm_headdim
+    ph = cfg.ssm_headdim
+
+    proj = linear(x, p["in_proj"])
+    z, xr, Bm, Cm, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+
+    if cache is None:
+        conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+        new_cache = None
+    else:
+        # decode: shift conv state, apply taps at the newest position
+        k = cfg.conv_kernel
+        cs = jnp.concatenate([cache["conv"][:, 1:], conv_in], axis=1)  # (B,K,C)
+        conv = (
+            jnp.einsum("bkc,kc->bc", cs.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32))
+            + p["conv_b"].astype(jnp.float32)
+        )[:, None, :].astype(x.dtype)
+        new_cache = {"conv": cs}
+
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xr, Bm, Cm = jnp.split(conv, [din, din + n], axis=-1)
+    xh = xr.reshape(b, s, h, ph)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                        # (H,)
+
+    if cache is None:
+        chunk = min(cfg.ssm_chunk, s)
+        gdt = jnp.bfloat16 if getattr(cfg, "gate_dtype", "fp32") == "bf16" else None
+        y, _ = _ssd_chunk_scan(xh, dt, Bm, Cm, A, chunk, gate_dtype=gdt)
+    else:
+        # O(1) recurrent step: hstate (B, H, P, N)
+        hprev = cache["ssm"]
+        a = jnp.exp(dt[:, 0, :] * A)                                # (B,H)
+        upd = jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, 0, :], Bm[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32),
+        )
+        hstate = hprev * a[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), hstate)
+        y = y[:, None]                                              # (B,1,H,P)
+        new_cache["ssm"] = hstate
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)      # gated
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return linear(y, p["out_proj"]), new_cache
+
+
+def mamba2_cache(cfg, batch: int, dtype=jnp.bfloat16) -> Cache:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = din // cfg.ssm_headdim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel, din + 2 * n), dtype),
+        "ssm": jnp.zeros((batch, h, cfg.ssm_headdim, n), jnp.float32),
+    }

@@ -1,0 +1,99 @@
+"""Mixture-of-Experts: top-k token-choice routing with capacity (GShard
+style dispatch/combine einsums) + optional always-on shared experts
+(deepseek-moe).
+
+Dispatch and combine are one-hot einsums so that expert parallelism is pure
+sharding: expert weights are sharded over the ``model`` axis, the dispatched
+activations (N, E, C, d) get an all-to-all from GSPMD, and every matmul
+stays MXU-shaped.  Tokens route in *groups* of ``moe_group_size`` (the
+GShard grouping) so the dispatch tensors stay O(tokens * E * C / g) -- with
+the per-group capacity C = g*k/E * factor this is O(tokens * k * factor)
+per expert slot, independent of sequence length.  Tokens beyond capacity
+are dropped (standard dropped-token semantics).  The router runs in fp32
+with a Switch-style load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .mlp import mlp, mlp_params
+
+Params = Dict[str, jax.Array]
+
+
+def moe_params(key, cfg, dtype=jnp.bfloat16) -> Params:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * 0.02,
+        # stacked expert weights: (E, d, ff) / (E, ff, d)
+        "w_gate": (jax.random.normal(ks[1], (e, d, ff), jnp.float32) * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, ff), jnp.float32) * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, ff, d), jnp.float32) * ff ** -0.5).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_params(
+            ks[4], d, cfg.moe_d_ff * cfg.num_shared_experts, dtype
+        )
+    return p
+
+
+def _capacity(group: int, num_experts: int, top_k: int, factor: float) -> int:
+    cap = int(group * top_k / num_experts * factor)
+    return max(4, (cap + 3) // 4 * 4)
+
+
+def moe(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    g = min(getattr(cfg, "moe_group_size", 256), s)
+    assert s % g == 0, (s, g)
+    n = b * (s // g)
+    cap = _capacity(g, e, k, cfg.capacity_factor)
+    xg = x.reshape(n, g, d)
+
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                       # (N,g,E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)               # (N,g,k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # per-choice accumulation keeps intermediates at (N, g, E, C)
+    dispatch = jnp.zeros((n, g, e, cap), jnp.float32)
+    combine = jnp.zeros((n, g, e, cap), jnp.float32)
+    counts = jnp.zeros((n, 1, e), jnp.float32)                    # used slots
+    for c in range(k):
+        oh = jax.nn.one_hot(expert_idx[:, :, c], e, dtype=jnp.float32)
+        pos = jnp.cumsum(oh, axis=1) - 1.0 + counts               # (N,g,E)
+        keep = (pos < cap) * oh
+        slot = jnp.clip(pos, 0, cap - 1).astype(jnp.int32)
+        sel = jax.nn.one_hot(slot, cap, dtype=jnp.float32) * keep[..., None]
+        dispatch = dispatch + sel
+        combine = combine + sel * gate_vals[:, :, c, None, None]
+        counts = counts + jnp.sum(keep, axis=1, keepdims=True)
+
+    xe = jnp.einsum("ngd,ngec->necd", xg.astype(jnp.float32), dispatch).astype(
+        x.dtype
+    )                                                             # (N,E,C,d)
+    h = jax.nn.silu(
+        jnp.einsum("necd,edf->necf", xe, p["w_gate"]).astype(jnp.float32)
+    ) * jnp.einsum("necd,edf->necf", xe, p["w_up"]).astype(jnp.float32)
+    ye = jnp.einsum("necf,efd->necd", h.astype(x.dtype), p["w_down"])
+    y = jnp.einsum("necd,ngec->ngd", ye.astype(jnp.float32), combine)
+    y = y.astype(x.dtype).reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], x)
+
+    # Switch load-balance loss: E * mean_e f_e * P_e
+    f = jnp.mean(
+        jax.nn.one_hot(expert_idx, e, dtype=jnp.float32).sum(axis=2), axis=1
+    )                                                             # (N,E)
+    pmean = jnp.mean(probs, axis=1)                               # (N,E)
+    aux = e * jnp.mean(jnp.sum(f * pmean, axis=-1))
+    return y, aux

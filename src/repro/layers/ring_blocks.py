@@ -1,0 +1,52 @@
+"""Ring-TP MLP block: the paper-derived collective matmuls at layer level.
+
+The GSPMD path (repro.layers.mlp + sharding rules) lets XLA choose the
+collective schedule.  This block *prescribes* it: Megatron-SP layout with
+the all-gather and reduce-scatter decomposed into one-hop ppermute chains
+overlapped with per-chunk matmuls (repro.dist.ring) -- the 1-D solutions
+of the paper's torus equations, and the beyond-paper overlap feature
+(paper Sec. 5 future-work item (f)).
+
+Layout contract (inside shard_map over the full mesh):
+  x_in  : (B_loc, S/tp, d)  -- sequence-sharded activations (SP)
+  out   : (B_loc, S/tp, d)  -- same
+  w_gate/w_up : (d, f/tp)   -- column-parallel shards
+  w_down      : (f/tp, d)   -- row-parallel shard
+
+Numerics identical to the GSPMD block (tested in
+tests/test_ring_blocks.py); the difference is the collective schedule.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.ring import ring_ag_matmul, ring_rs_matmul
+
+Params = Dict[str, jax.Array]
+
+
+def ring_mlp(p_local: Params, x: jax.Array, tp_axis: str = "model") -> jax.Array:
+    """Inside shard_map.  x: (B, S_loc, d) sequence-sharded over tp_axis;
+    p_local: per-device shards of w_gate/w_up (d, f_loc), w_down (f_loc, d).
+    """
+    # ring all-gather matmuls: (B, S_loc, d) -> (B, S, f_loc), overlapped
+    g = ring_ag_matmul(x, p_local["w_gate"], tp_axis)
+    u = ring_ag_matmul(x, p_local["w_up"], tp_axis)
+    h = jax.nn.silu(g) * u
+    # ring reduce-scatter matmul: (B, S, f_loc) -> (B, S_loc, d), reduced
+    return ring_rs_matmul(h, p_local["w_down"], tp_axis)
+
+
+def gspmd_mlp_reference(p: Params, x: jax.Array) -> jax.Array:
+    """The plain data-flow the GSPMD path computes (global view)."""
+    g = jax.nn.silu(
+        jnp.matmul(x, p["w_gate"], preferred_element_type=jnp.float32)
+    ).astype(x.dtype)
+    u = jnp.matmul(x, p["w_up"], preferred_element_type=jnp.float32).astype(x.dtype)
+    return jnp.matmul(
+        (g.astype(jnp.float32) * u.astype(jnp.float32)).astype(x.dtype),
+        p["w_down"], preferred_element_type=jnp.float32,
+    ).astype(x.dtype)

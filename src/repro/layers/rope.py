@@ -1,0 +1,26 @@
+"""Rotary position embeddings (llama convention: rotate half)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32.  Rotates pairs
+    (x[..., :D/2], x[..., D/2:]) per the llama convention."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                   # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs         # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                        # (..., S, 1, D/2)
+    sin = sin[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)

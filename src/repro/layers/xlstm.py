@@ -1,0 +1,240 @@
+"""xLSTM layers: chunked-parallel mLSTM and sequential sLSTM.
+
+mLSTM (matrix memory, covariance update) is run in a chunkwise-parallel
+matmul form -- the intra-chunk part is a masked (L x L) product, the
+inter-chunk part a rank-L state update -- mirroring the SSD schedule (and,
+in this repo's framing, the paper's blocked time-superstep schedule).
+Gates use bounded sigmoids (f, i in (0,1)); this differs from the xLSTM
+paper's exponential input gate + stabilizer track and is recorded in
+DESIGN.md: the bounded variant needs no stabilizer state and is exact in
+fp32 at our chunk sizes.
+
+sLSTM (scalar memory, new memory mixing) is inherently sequential
+(recurrent weights R act on h_{t-1}); it runs as a lax.scan over time with
+block-diagonal (per-head) recurrence, exactly as the paper's Sec.-4.3
+"no-symmetry-to-exploit" fallback predicts.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .linear import linear, linear_params
+from .norms import rms_norm, rms_norm_params
+
+Params = Dict[str, jax.Array]
+Cache = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_params(key, cfg, dtype=jnp.bfloat16) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": linear_params(ks[0], d, d, dtype),
+        "wk": linear_params(ks[1], d, d, dtype),
+        "wv": linear_params(ks[2], d, d, dtype),
+        "w_gates": linear_params(ks[3], d, 2 * h, jnp.float32),  # i, f per head
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((h,), jnp.float32), 3.0 * jnp.ones((h,), jnp.float32)]
+        ),  # forget bias ~ sigmoid(3) = .95
+        "norm": rms_norm_params(d),
+        "wo": linear_params(ks[4], d, d, dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, li, lf, chunk: int, gate_dtype=None):
+    """q,k,v: (B, S, H, D); li, lf: (B, S, H) log input/forget gates.
+    Returns y: (B, S, H, D), final (C, n) state.  gate_dtype=bf16 stores the
+    (L, L, H) decay/weight matrices at half width (Sec.-Perf knob)."""
+    b, s, h, dh = q.shape
+    pad = (-s) % chunk
+    if pad:  # causal-safe trailing pad; sliced back at return
+        z = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        q, k, v, li, lf = z(q), z(k), z(v), z(li), z(lf)
+        s_orig, s = s, s + pad
+    else:
+        s_orig = s
+    nc, L = s // chunk, chunk
+    scale = dh ** -0.5
+
+    def toc(t):
+        return t.reshape(b, nc, L, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lic, lfc = map(toc, (q, k, v, li, lf))
+
+    def body(carry, args):
+        C, nrm = carry  # C: (B,H,D,D)  nrm: (B,H,D)
+        qk, kk, vk, lik, lfk = args
+        cum = jnp.cumsum(lfk, axis=1)                    # (B,L,H)
+        # intra-chunk attention-like term
+        sc = jnp.einsum("bihd,bjhd->bijh", qk.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+        decay = cum[:, :, None, :] - cum[:, None, :, :] + lik[:, None, :, :]
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        gate = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        w = sc * gate                                    # (B,L,L,H)
+        if gate_dtype is not None:
+            w = w.astype(gate_dtype)
+        y = jnp.einsum("bijh,bjhd->bihd", w, vk.astype(w.dtype),
+                       preferred_element_type=jnp.float32)
+        # inter-chunk: y_i += exp(cum_i) q_i . C ; denominator via n
+        y = y + jnp.einsum(
+            "bihd,bhde,bih->bihe", qk.astype(jnp.float32), C, jnp.exp(cum)
+        ) * scale
+        qn = jnp.einsum(
+            "bihd,bhd,bih->bih", qk.astype(jnp.float32), nrm, jnp.exp(cum)
+        ) * scale
+        qn = qn + jnp.einsum("bijh,bjhd,bihd->bih", gate,
+                             kk.astype(jnp.float32),
+                             qk.astype(jnp.float32)) * scale
+        denom = jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+        y = y / denom
+        # state update
+        tot = cum[:, -1:, :]
+        cd = jnp.exp(tot - cum + lik)                    # (B,L,H)
+        C = C * jnp.exp(tot[:, 0])[:, :, None, None] + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", cd, kk.astype(jnp.float32),
+            vk.astype(jnp.float32),
+        )
+        nrm = nrm * jnp.exp(tot[:, 0])[:, :, None] + jnp.einsum(
+            "bjh,bjhd->bhd", cd, kk.astype(jnp.float32)
+        )
+        return (C, nrm), y
+
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    (Cf, nf), yc = jax.lax.scan(body, (C0, n0), (qc, kc, vc, lic, lfc))
+    return yc.swapaxes(0, 1).reshape(b, s, h, dh)[:, :s_orig], (Cf, nf)
+
+
+def mlstm(
+    p: Params, x: jax.Array, cfg,
+    cache: Optional[Cache] = None,
+    pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Cache]]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    q = linear(x, p["wq"]).reshape(b, s, h, dh)
+    k = linear(x, p["wk"]).reshape(b, s, h, dh)
+    v = linear(x, p["wv"]).reshape(b, s, h, dh)
+    gates = (
+        jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), p["w_gates"])
+        + p["gate_bias"]
+    )
+    li = jax.nn.log_sigmoid(gates[..., :h])              # (B,S,H)
+    lf = jax.nn.log_sigmoid(gates[..., h:])
+
+    if cache is None:
+        chunk = min(getattr(cfg, "ssm_chunk", 256), s)
+        gdt = jnp.bfloat16 if getattr(cfg, "gate_dtype", "fp32") == "bf16" else None
+        y, _ = _mlstm_chunk_scan(q, k, v, li, lf, chunk, gate_dtype=gdt)
+        new_cache = None
+    else:
+        C, nrm = cache["C"], cache["n"]
+        f = jnp.exp(lf[:, 0])                            # (B,H)
+        i = jnp.exp(li[:, 0])
+        C = C * f[:, :, None, None] + jnp.einsum(
+            "bhd,bhe,bh->bhde", k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), i,
+        )
+        nrm = nrm * f[:, :, None] + k[:, 0].astype(jnp.float32) * i[:, :, None]
+        scale = dh ** -0.5
+        y = jnp.einsum("bhd,bhde->bhe", q[:, 0].astype(jnp.float32), C) * scale
+        qn = jnp.einsum("bhd,bhd->bh", q[:, 0].astype(jnp.float32), nrm) * scale
+        y = y / jnp.maximum(jnp.abs(qn), 1.0)[..., None]
+        y = y[:, None]
+        new_cache = {"C": C, "n": nrm}
+
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return linear(y, p["wo"]), new_cache
+
+
+def mlstm_cache(cfg, batch: int) -> Cache:
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_params(key, cfg, dtype=jnp.bfloat16) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": linear_params(ks[0], d, 4 * d, jnp.float32),  # z, i, f, o
+        "r": (jax.random.normal(ks[1], (4, h, dh, dh), jnp.float32) * dh ** -0.5),
+        "bias": jnp.concatenate(
+            [jnp.zeros((2 * d,), jnp.float32), 3.0 * jnp.ones((d,), jnp.float32),
+             jnp.zeros((d,), jnp.float32)]
+        ),
+        "norm": rms_norm_params(d),
+        "wo": linear_params(ks[2], d, d, dtype),
+    }
+
+
+def _slstm_step(p, cfg, carry, wx_t):
+    """carry: (h, c, n) each (B, H, Dh); wx_t: (B, 4d) precomputed W x_t."""
+    hprev, cprev, nprev = carry
+    b = hprev.shape[0]
+    hcfg = cfg.num_heads
+    dh = cfg.d_model // hcfg
+    rec = jnp.einsum("bhd,ghde->bghe", hprev, p["r"])     # (B,4,H,Dh)
+    pre = wx_t.reshape(b, 4, hcfg, dh) + rec + p["bias"].reshape(4, hcfg, dh)
+    z = jnp.tanh(pre[:, 0])
+    i = jax.nn.sigmoid(pre[:, 1])
+    f = jax.nn.sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    c = f * cprev + i * z
+    n = f * nprev + i
+    hnew = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return (hnew, c, n), hnew
+
+
+def slstm(
+    p: Params, x: jax.Array, cfg,
+    cache: Optional[Cache] = None,
+    pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Cache]]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    wx = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["w_in"])
+
+    if cache is None:
+        carry0 = tuple(jnp.zeros((b, h, dh), jnp.float32) for _ in range(3))
+        step = lambda c, w: _slstm_step(p, cfg, c, w)
+        _, ys = jax.lax.scan(step, carry0, wx.swapaxes(0, 1))
+        y = ys.swapaxes(0, 1).reshape(b, s, d)
+        new_cache = None
+    else:
+        carry = (cache["h"], cache["c"], cache["n"])
+        carry, ys = _slstm_step(p, cfg, carry, wx[:, 0])
+        y = ys.reshape(b, 1, d)
+        new_cache = {"h": carry[0], "c": carry[1], "n": carry[2]}
+
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    return linear(y, p["wo"]), new_cache
+
+
+def slstm_cache(cfg, batch: int) -> Cache:
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z}

@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig
+from repro.models.registry import build_model
+
+__all__ = ["ModelConfig", "build_model"]

@@ -1,0 +1,198 @@
+"""Encoder-decoder LM (seamless-m4t backbone).
+
+The modality frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_src, d) from ``input_specs``.  Encoder
+blocks are non-causal self-attention + MLP; decoder blocks add causal
+self-attention (cached at decode) and cross-attention over the encoder
+output (K/V cached once at prefill).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.attention import (chunked_attention, gqa_attention,
+                                    gqa_cache, gqa_params)
+from repro.layers.embed import embed, embed_params, unembed
+from repro.layers.linear import linear, linear_params
+from repro.layers.mlp import mlp, mlp_params
+from repro.layers.norms import rms_norm, rms_norm_params
+from repro.models.config import ModelConfig
+from repro.models.lm import _remat, _stack_init, cross_entropy
+from repro.runtime.sharding import constrain
+
+Params = Dict
+Cache = Dict
+
+
+def _xattn_params(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": linear_params(ks[0], d, h * hd, dtype),
+        "wk": linear_params(ks[1], d, kv * hd, dtype),
+        "wv": linear_params(ks[2], d, kv * hd, dtype),
+        "wo": linear_params(ks[3], h * hd, d, dtype),
+    }
+
+
+def _cross_attention(p, x, memory, cfg, cached_kv=None):
+    """x: (B, St, d) queries; memory: (B, Ss, d) encoder output."""
+    b, st, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = linear(x, p["wq"]).reshape(b, st, h, hd)
+    if cached_kv is None:
+        ss = memory.shape[1]
+        k = linear(memory, p["wk"]).reshape(b, ss, kv, hd)
+        v = linear(memory, p["wv"]).reshape(b, ss, kv, hd)
+    else:
+        k, v = cached_kv["k"], cached_kv["v"]
+        ss = k.shape[1]
+    qpos = jnp.arange(st)
+    kpos = jnp.arange(ss)
+    o = chunked_attention(
+        q, k, v, qpos, kpos, chunk=cfg.attn_chunk, causal=False
+    )
+    return linear(o.reshape(b, st, h * hd), p["wo"])
+
+
+def _enc_block_params(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": rms_norm_params(cfg.d_model),
+        "attn": gqa_params(k1, cfg, dtype),
+        "mlp_norm": rms_norm_params(cfg.d_model),
+        "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_block_params(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": rms_norm_params(cfg.d_model),
+        "self_attn": gqa_params(k1, cfg, dtype),
+        "cross_norm": rms_norm_params(cfg.d_model),
+        "cross_attn": _xattn_params(k2, cfg, dtype),
+        "mlp_norm": rms_norm_params(cfg.d_model),
+        "mlp": mlp_params(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ke, kd, kt = jax.random.split(key, 3)
+        return {
+            "embed": embed_params(
+                kt, cfg.vocab_size, cfg.d_model, cfg.tie_embeddings, self.dtype
+            ),
+            "enc_layers": _stack_init(
+                ke, cfg.enc_layers, lambda k: _enc_block_params(k, cfg, self.dtype)
+            ),
+            "dec_layers": _stack_init(
+                kd, cfg.dec_layers, lambda k: _dec_block_params(k, cfg, self.dtype)
+            ),
+            "enc_norm": rms_norm_params(cfg.d_model),
+            "final_norm": rms_norm_params(cfg.d_model),
+        }
+
+    def encode(self, params: Params, src_embed: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = constrain(src_embed.astype(self.dtype), "batch", None, None)
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, lp):
+            h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+            a, _ = gqa_attention(lp["attn"], h, cfg, positions, causal=False)
+            x = x + a
+            h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+            return x + mlp(lp["mlp"], h), None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_layers"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def decode_train(self, params, memory, tgt_tokens) -> jax.Array:
+        cfg = self.cfg
+        x = embed(params["embed"], tgt_tokens)
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, lp):
+            h = rms_norm(x, lp["self_norm"], cfg.norm_eps)
+            a, _ = gqa_attention(lp["self_attn"], h, cfg, positions, causal=True)
+            x = x + a
+            h = rms_norm(x, lp["cross_norm"], cfg.norm_eps)
+            x = x + _cross_attention(lp["cross_attn"], h, memory, cfg)
+            h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+            return x + mlp(lp["mlp"], h), None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec_layers"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return unembed(params["embed"], x, cfg.vocab_size)
+
+    def forward(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        memory = self.encode(params, batch["src_embed"])
+        logits = self.decode_train(params, memory, batch["tokens"])
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params: Params, batch: Dict) -> Tuple[jax.Array, Dict]:
+        logits, _ = self.forward(params, batch)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce, {"ce": ce}
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, src_len: int = 1024) -> Cache:
+        cfg = self.cfg
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        self_one = gqa_cache(cfg, batch, max_seq, self.dtype)
+        ld = cfg.dec_layers
+        return {
+            "self": jax.tree.map(
+                lambda a: jnp.zeros((ld,) + a.shape, a.dtype), self_one
+            ),
+            "cross": {
+                "k": jnp.zeros((ld, batch, src_len, kv, hd), self.dtype),
+                "v": jnp.zeros((ld, batch, src_len, kv, hd), self.dtype),
+            },
+        }
+
+    def prefill_cross(self, params, memory, cache: Cache) -> Cache:
+        """Fill the cross-attention K/V cache from encoder output."""
+        cfg = self.cfg
+        b, ss, _ = memory.shape
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+
+        def body(_, lp):
+            k = linear(memory, lp["cross_attn"]["wk"]).reshape(b, ss, kv, hd)
+            v = linear(memory, lp["cross_attn"]["wv"]).reshape(b, ss, kv, hd)
+            return None, {"k": k, "v": v}
+
+        _, cross = jax.lax.scan(body, None, params["dec_layers"])
+        return {**cache, "cross": cross}
+
+    def decode_step(self, params, cache: Cache, tokens, pos) -> Tuple[jax.Array, Cache]:
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+        positions = jnp.full((1,), pos, jnp.int32)
+
+        def body(x, lp_lc):
+            lp, sc, cc = lp_lc
+            h = rms_norm(x, lp["self_norm"], cfg.norm_eps)
+            a, nsc = gqa_attention(lp["self_attn"], h, cfg, positions, sc, pos)
+            x = x + a
+            h = rms_norm(x, lp["cross_norm"], cfg.norm_eps)
+            x = x + _cross_attention(lp["cross_attn"], h, None, cfg, cached_kv=cc)
+            h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+            return x + mlp(lp["mlp"], h), nsc
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["self"], cache["cross"])
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.vocab_size)[:, 0]
+        return logits, {"self": new_self, "cross": cache["cross"]}

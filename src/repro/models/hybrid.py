@@ -1,0 +1,148 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+54 Mamba layers grouped in blocks of ``shared_attn_every``; after each group
+the single shared transformer block (same parameters every invocation, as in
+Zamba/Zamba2) runs on concat(hidden, original_embedding) projected back to
+d_model.  Each invocation keeps its own KV cache (params shared, state not).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.attention import gqa_attention, gqa_cache, gqa_params
+from repro.layers.blocks import block_apply, block_params
+from repro.layers.embed import embed, embed_params, unembed
+from repro.layers.linear import linear, linear_params
+from repro.layers.mamba2 import mamba2_cache
+from repro.layers.mlp import mlp, mlp_params
+from repro.layers.norms import rms_norm, rms_norm_params
+from repro.models.config import ModelConfig
+from repro.models.lm import _remat, _stack_init, cross_entropy
+from repro.runtime.sharding import constrain
+
+Params = Dict
+Cache = Dict
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        assert cfg.shared_attn_every > 0
+        assert cfg.num_layers % cfg.shared_attn_every == 0
+        self.n_groups = cfg.num_layers // cfg.shared_attn_every
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ke, km, ks, kc, kf = jax.random.split(key, 5)
+        return {
+            "embed": embed_params(
+                ke, cfg.vocab_size, cfg.d_model, cfg.tie_embeddings, self.dtype
+            ),
+            # (G, per_group, ...) doubly-stacked mamba blocks
+            "mamba_layers": _stack_init(
+                km, cfg.num_layers,
+                lambda k: block_params(k, cfg, "mamba", self.dtype),
+            ),
+            "shared_in": linear_params(kc, 2 * cfg.d_model, cfg.d_model, self.dtype),
+            "shared": {
+                "attn_norm": rms_norm_params(cfg.d_model),
+                "attn": gqa_params(ks, cfg, self.dtype),
+                "mlp_norm": rms_norm_params(cfg.d_model),
+                "mlp": mlp_params(kf, cfg.d_model, cfg.d_ff, self.dtype),
+            },
+            "final_norm": rms_norm_params(cfg.d_model),
+        }
+
+    def _regroup(self, stacked):
+        g, per = self.n_groups, self.cfg.shared_attn_every
+        return jax.tree.map(
+            lambda a: a.reshape(g, per, *a.shape[1:]), stacked
+        )
+
+    def _shared_block(self, params, x, x0, positions, cache=None, pos=None):
+        cfg = self.cfg
+        h = linear(jnp.concatenate([x, x0], axis=-1), params["shared_in"])
+        sp = params["shared"]
+        hn = rms_norm(h, sp["attn_norm"], cfg.norm_eps)
+        a, new_cache = gqa_attention(sp["attn"], hn, cfg, positions, cache, pos)
+        h = h + a
+        hn = rms_norm(h, sp["mlp_norm"], cfg.norm_eps)
+        h = h + mlp(sp["mlp"], hn)
+        return x + h, new_cache
+
+    def forward(self, params: Params, tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x0 = embed(params["embed"], tokens)
+        x0 = constrain(x0, "batch", None, None)
+        positions = jnp.arange(tokens.shape[1])
+        grouped = self._regroup(params["mamba_layers"])
+
+        def group_body(x, group_params):
+            def mamba_body(x, lp):
+                x, _, _ = block_apply(lp, x, cfg, "mamba", positions)
+                return x, None
+            x, _ = jax.lax.scan(_remat(mamba_body, cfg), x, group_params)
+            x, _ = self._shared_block(params, x, x0, positions)
+            return x, None
+
+        x, _ = jax.lax.scan(group_body, x0, grouped)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.vocab_size)
+        return constrain(logits, "batch", None, "model"), jnp.zeros((), jnp.float32)
+
+    def loss(self, params: Params, batch: Dict) -> Tuple[jax.Array, Dict]:
+        logits, _ = self.forward(params, batch["tokens"])
+        ce = cross_entropy(logits, batch["labels"])
+        return ce, {"ce": ce}
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> Cache:
+        cfg = self.cfg
+        m_one = mamba2_cache(cfg, batch, self.dtype)
+        a_one = gqa_cache(cfg, batch, max_seq, self.dtype)
+        return {
+            "mamba": jax.tree.map(
+                lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), m_one
+            ),
+            "shared": jax.tree.map(
+                lambda a: jnp.zeros((self.n_groups,) + a.shape, a.dtype), a_one
+            ),
+        }
+
+    def decode_step(self, params, cache: Cache, tokens, pos) -> Tuple[jax.Array, Cache]:
+        cfg = self.cfg
+        x0 = embed(params["embed"], tokens)
+        positions = jnp.full((1,), pos, jnp.int32)
+        grouped_p = self._regroup(params["mamba_layers"])
+        grouped_c = self._regroup_cache(cache["mamba"])
+
+        def group_body(x, args):
+            gp, gc, sc = args
+            def mamba_body(x, lp_lc):
+                lp, lc = lp_lc
+                x, _, nc = block_apply(lp, x, cfg, "mamba", positions, lc, pos)
+                return x, nc
+            x, new_gc = jax.lax.scan(mamba_body, x, (gp, gc))
+            x, new_sc = self._shared_block(params, x, x0, positions, sc, pos)
+            return x, (new_gc, new_sc)
+
+        x, (new_mamba, new_shared) = jax.lax.scan(
+            group_body, x0, (grouped_p, grouped_c, cache["shared"])
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.vocab_size)[:, 0]
+        new_cache = {
+            "mamba": jax.tree.map(
+                lambda a: a.reshape(cfg.num_layers, *a.shape[2:]), new_mamba
+            ),
+            "shared": new_shared,
+        }
+        return logits, new_cache
+
+    def _regroup_cache(self, stacked):
+        g, per = self.n_groups, self.cfg.shared_attn_every
+        return jax.tree.map(lambda a: a.reshape(g, per, *a.shape[1:]), stacked)

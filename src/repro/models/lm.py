@@ -1,0 +1,177 @@
+"""Decoder-only LM covering the dense / MoE / VLM (early-fusion) families.
+
+Layers are *stacked* (one leading L axis per parameter) and executed with
+``jax.lax.scan`` so the HLO -- and hence the 512-device dry-run compile time
+-- is depth-independent.  deepseek-moe's leading dense layers live in their
+own (short) stack.  Decode threads the per-layer KV caches through the same
+scan.  Remat policy is configurable per config (none | dots | full).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.blocks import block_apply, block_params
+from repro.layers.attention import gqa_cache, mla_cache
+from repro.layers.embed import embed, embed_params, unembed
+from repro.layers.norms import rms_norm, rms_norm_params
+from repro.models.config import ModelConfig
+from repro.runtime.sharding import constrain
+
+Params = Dict
+Cache = Dict
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def _stack_init(key, n: int, mk):
+    return jax.vmap(mk)(jax.random.split(key, n))
+
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kind = "attn_moe" if cfg.num_experts else "attn_mlp"
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # -- params -------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_e, k_d, k_l = jax.random.split(key, 3)
+        params: Params = {
+            "embed": embed_params(
+                k_e, cfg.vocab_size, cfg.d_model, cfg.tie_embeddings, self.dtype
+            ),
+            "final_norm": rms_norm_params(cfg.d_model),
+        }
+        nd = cfg.first_dense_layers
+        if nd:
+            params["dense_layers"] = _stack_init(
+                k_d, nd, lambda k: block_params(k, cfg, "attn_mlp", self.dtype)
+            )
+        params["layers"] = _stack_init(
+            k_l, cfg.num_layers - nd,
+            lambda k: block_params(k, cfg, self.kind, self.dtype),
+        )
+        return params
+
+    # -- forward ------------------------------------------------------------
+    def forward(self, params: Params, tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """tokens: (B, S) -> (logits (B, S, V) fp32, aux loss)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+        x = constrain(x, "batch", None, None)
+        positions = jnp.arange(tokens.shape[1])
+        aux0 = jnp.zeros((), jnp.float32)
+
+        if cfg.first_dense_layers:
+            def dense_body(carry, lp):
+                x, aux = carry
+                x, a, _ = block_apply(lp, x, cfg, "attn_mlp", positions)
+                return (x, aux + a), None
+            (x, aux0), _ = jax.lax.scan(
+                _remat(dense_body, cfg), (x, aux0), params["dense_layers"]
+            )
+
+        def body(carry, lp):
+            x, aux = carry
+            x, a, _ = block_apply(lp, x, cfg, self.kind, positions)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(_remat(body, cfg), (x, aux0), params["layers"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.vocab_size)
+        logits = constrain(logits, "batch", None, "model")
+        return logits, aux
+
+    def loss(self, params: Params, batch: Dict) -> Tuple[jax.Array, Dict]:
+        logits, aux = self.forward(params, batch["tokens"])
+        ce = cross_entropy(logits, batch["labels"])
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> Cache:
+        cfg = self.cfg
+        mk = mla_cache if cfg.attn_type == "mla" else gqa_cache
+        one = mk(cfg, batch, max_seq, self.dtype)
+        nd = cfg.first_dense_layers
+        cache: Cache = {
+            "layers": jax.tree.map(
+                lambda a: jnp.zeros((cfg.num_layers - nd,) + a.shape, a.dtype), one
+            )
+        }
+        if nd:
+            cache["dense_layers"] = jax.tree.map(
+                lambda a: jnp.zeros((nd,) + a.shape, a.dtype), one
+            )
+        return cache
+
+    def prefill(
+        self, params: Params, cache: Cache, tokens: jax.Array
+    ) -> Tuple[jax.Array, Cache]:
+        """One-pass prompt ingestion: runs the full (B, S_prompt) forward
+        through the *cached* attention path (writes K/V at positions
+        [0, S)), returning last-token logits + the filled cache.  The
+        production serving path: prompt cost is one forward instead of
+        S_prompt decode steps."""
+        return self._cached_forward(params, cache, tokens,
+                                    jnp.arange(tokens.shape[1]), jnp.int32(0))
+
+    def decode_step(
+        self, params: Params, cache: Cache, tokens: jax.Array, pos: jax.Array
+    ) -> Tuple[jax.Array, Cache]:
+        """tokens: (B, 1); pos: scalar int32.  Returns (logits (B, V), cache)."""
+        return self._cached_forward(
+            params, cache, tokens, jnp.full((1,), pos, jnp.int32), pos
+        )
+
+    def _cached_forward(
+        self, params: Params, cache: Cache, tokens: jax.Array,
+        positions: jax.Array, pos: jax.Array,
+    ) -> Tuple[jax.Array, Cache]:
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+        new_cache: Cache = {}
+
+        if cfg.first_dense_layers:
+            def dense_body(x, lp_lc):
+                lp, lc = lp_lc
+                x, _, nc = block_apply(lp, x, cfg, "attn_mlp", positions, lc, pos)
+                return x, nc
+            x, new_cache["dense_layers"] = jax.lax.scan(
+                dense_body, x, (params["dense_layers"], cache["dense_layers"])
+            )
+
+        def body(x, lp_lc):
+            lp, lc = lp_lc
+            x, _, nc = block_apply(lp, x, cfg, self.kind, positions, lc, pos)
+            return x, nc
+
+        x, new_cache["layers"] = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"])
+        )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.vocab_size)[:, -1]
+        return logits, new_cache
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits fp32 (B, S, V); labels (B, S) with -100 = ignore."""
+    valid = labels >= 0
+    labels_c = jnp.clip(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return jnp.sum(nll) / jnp.clip(jnp.sum(valid), 1)

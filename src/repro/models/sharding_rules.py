@@ -1,0 +1,214 @@
+"""PartitionSpec rules for parameters, optimizer state and caches.
+
+Rules are name-based (the layer library uses a stable naming convention) and
+rank-relative: stacked-layer leading axes get ``None`` prepended
+automatically, so the same table covers per-layer and scanned parameters.
+
+Weight sharding follows the standard Megatron mapping onto the ``model``
+axis -- column-parallel up-projections, row-parallel down-projections,
+vocab-sharded embedding, expert-parallel MoE stacks -- which is exactly the
+1-D torus solution family of the paper's equations (see repro.dist.ring).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.runtime.sharding import resolve_axis
+
+# name -> (base_rank, base_spec over logical axes)
+_RULES: Dict[str, Tuple[int, Tuple]] = {
+    # embeddings
+    "embedding": (2, ("model", None)),
+    "lm_head": (2, (None, "model")),
+    # attention / generic projections (column-parallel)
+    "wq": (2, (None, "model")),
+    "wk": (2, (None, "model")),
+    "wv": (2, (None, "model")),
+    "wq_a": (2, (None, "model")),
+    "wq_b": (2, (None, "model")),
+    "wkv_a": (2, (None, "model")),
+    "wkv_b": (2, (None, "model")),
+    "w_in": (2, (None, "model")),
+    "w_gates": (2, (None, "model")),
+    "in_proj": (2, (None, "model")),
+    "shared_in": (2, (None, "model")),
+    # row-parallel
+    "wo": (2, ("model", None)),
+    "w_down": (2, ("model", None)),
+    "out_proj": (2, ("model", None)),
+    # dense mlp column-parallel
+    "w_gate": (2, (None, "model")),
+    "w_up": (2, (None, "model")),
+    # moe expert stacks (expert-parallel) -- matched with parent 'moe'
+    "moe/w_gate": (3, ("model", None, None)),
+    "moe/w_up": (3, ("model", None, None)),
+    "moe/w_down": (3, ("model", None, None)),
+    "router": (2, (None, None)),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(str(e.idx))
+    return tuple(names)
+
+
+def _spec_for(path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    # expert stacks sit directly under "moe"; the shared expert is a plain
+    # MLP nested at moe/shared/* and must use the dense rules
+    key = f"moe/{name}" if parent == "moe" and f"moe/{name}" in _RULES else name
+    if key not in _RULES:
+        return P()  # replicated (norms, biases, A_log, conv, r, ...)
+    base_rank, base = _RULES[key]
+    extra = leaf.ndim - base_rank
+    if extra < 0:
+        return P()
+    return P(*((None,) * extra + base))
+
+
+def param_specs(params: Any) -> Any:
+    """Pytree of PartitionSpec mirroring ``params``."""
+    return jax.tree_util.tree_map_with_path(_spec_for, params)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= _axis_size(mesh, a)
+        return out
+    return mesh.shape.get(axis, 1)
+
+
+def param_shardings(params: Any, mesh: Mesh) -> Any:
+    """Resolve logical specs against ``mesh``, dropping any sharded axis a
+    dimension cannot honour (e.g. tiny gate projections vs model=16)."""
+
+    def resolve(leaf, spec: P) -> NamedSharding:
+        axes = [resolve_axis(a, mesh) for a in spec]
+        shape = getattr(leaf, "shape", ())
+        for i, a in enumerate(axes):
+            if a is None or i >= len(shape):
+                continue
+            if shape[i] % _axis_size(mesh, a) != 0:
+                axes[i] = None
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(resolve, params, param_specs(params))
+
+
+# decode-cache layout: every cache tensor is (L, B, ...); per name the
+# candidate axes to shard over 'model', in priority order (first divisible
+# dimension wins).  KV caches prefer heads, then the SEQUENCE axis:
+# seq-sharding is split-KV (flash-decoding) -- the paper's contraction-axis
+# parallelism (2.5D j-split) applied to decode.  Sharding head_dim instead
+# was measured to force a full-cache all-gather (9.2 GB/step on
+# llama decode_32k) because queries arrive head-sharded; see
+# EXPERIMENTS.md Sec. Perf, hillclimb C.
+_CACHE_MODEL_DIMS = {
+    "k": (3, 2),        # (L, B, S, H_kv, Dh): heads, else seq (split-KV)
+    "v": (3, 2),
+    "c_kv": (2,),       # (L, B, S, R): seq (split-KV in the latent space)
+    "k_rope": (2,),
+    "ssm": (2,),        # (L, B, H, P, N): heads
+    "conv": (3,),       # (L, B, K, C): channels
+    "C": (2, 3),        # mLSTM state (L, B, H, D, D)
+    "n": (2,),
+    "h": (2,),
+    "c": (2,),
+}
+_CACHE_SEQ_DIM = {"k": 2, "v": 2, "c_kv": 2, "k_rope": 2}
+
+
+def cache_specs(cache: Any, *, shard_batch: bool,
+                model_size: int = 1, data_size: int = 1) -> Any:
+    """Decode-cache specs.
+
+    shard_batch=True (decode_32k): batch over ('pod','data') AND the first
+    divisible head/feature dim over 'model' -- KV caches are the dominant
+    decode state and must use the whole mesh.
+    shard_batch=False (long_500k, batch=1): KV sequence over 'data'
+    (split-KV decode) plus the same model-axis dim."""
+
+    def spec(path, leaf) -> P:
+        names = _path_names(path)
+        name = names[-1]
+        shape = getattr(leaf, "shape", ())
+        n = len(shape)
+        axes = [None] * n
+        if shard_batch:
+            if n >= 2 and shape[1] % max(data_size, 1) == 0:
+                axes[1] = "batch"
+        else:
+            sd = _CACHE_SEQ_DIM.get(name)
+            if sd is not None and sd < n and shape[sd] % max(data_size, 1) == 0:
+                axes[sd] = "data"
+        for dim in _CACHE_MODEL_DIMS.get(name, ()):
+            if dim < n and axes[dim] is None and model_size > 1 \
+                    and shape[dim] % model_size == 0:
+                axes[dim] = "model"
+                break
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def cache_shardings(cache: Any, mesh: Mesh, *, shard_batch: bool) -> Any:
+    model_size = mesh.shape.get("model", 1)
+    data_size = _axis_size(mesh, resolve_axis("batch", mesh))
+    specs = cache_specs(
+        cache, shard_batch=shard_batch,
+        model_size=model_size,
+        data_size=data_size if shard_batch else mesh.shape.get("data", 1),
+    )
+
+    def resolve(leaf, spec: P) -> NamedSharding:
+        axes = [resolve_axis(a, mesh) for a in spec]
+        shape = getattr(leaf, "shape", ())
+        for i, a in enumerate(axes):
+            if a is None or i >= len(shape):
+                continue
+            if shape[i] % _axis_size(mesh, a) != 0:
+                axes[i] = None
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree.map(resolve, cache, specs)
+
+
+def zero_shardings(params: Any, mesh: Mesh) -> Any:
+    """ZeRO-1 shardings for fp32 optimizer state (master/m/v): the param
+    spec plus the data axis on the largest still-unsharded dimension.
+    Cuts per-device optimizer bytes by |data| (x16 here); GSPMD inserts the
+    corresponding reduce-scatter/all-gather pair around the update."""
+    data_axes = resolve_axis("batch", mesh)  # ('pod','data') when multi-pod
+    dsize = _axis_size(mesh, data_axes)
+
+    def resolve(leaf, spec: P) -> NamedSharding:
+        shape = getattr(leaf, "shape", ())
+        axes = [resolve_axis(a, mesh) for a in spec]
+        axes += [None] * (len(shape) - len(axes))  # replicated-spec padding
+        for i, a in enumerate(axes):
+            if a is not None and i < len(shape) \
+                    and shape[i] % _axis_size(mesh, a) != 0:
+                axes[i] = None
+        if dsize > 1 and len(shape) >= 1:
+            cands = [i for i in range(len(shape))
+                     if axes[i] is None and shape[i] % dsize == 0]
+            if cands:
+                best = max(cands, key=lambda i: shape[i])
+                axes[best] = data_axes
+        return NamedSharding(mesh, P(*axes[: len(shape)]))
+
+    return jax.tree.map(resolve, params, param_specs(params))

@@ -1,0 +1,147 @@
+"""xLSTM LM: repeating groups of (mLSTM x k, sLSTM x 1) blocks.
+
+The group pattern comes from cfg.block_pattern (default mmm-s); groups are
+scanned (stacked params per block kind within the group), so depth stays out
+of the HLO.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.blocks import block_apply, block_params
+from repro.layers.embed import embed, embed_params, unembed
+from repro.layers.norms import rms_norm, rms_norm_params
+from repro.layers.xlstm import mlstm_cache, slstm_cache
+from repro.models.config import ModelConfig
+from repro.models.lm import _remat, _stack_init, cross_entropy
+from repro.runtime.sharding import constrain
+
+Params = Dict
+Cache = Dict
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        pattern = cfg.block_pattern or ("mlstm", "mlstm", "mlstm", "slstm")
+        assert cfg.num_layers % len(pattern) == 0
+        self.pattern = pattern
+        self.n_groups = cfg.num_layers // len(pattern)
+        self.n_m = sum(1 for b in pattern if b == "mlstm")
+        self.n_s = sum(1 for b in pattern if b == "slstm")
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ke, km, ks = jax.random.split(key, 3)
+        params: Params = {
+            "embed": embed_params(
+                ke, cfg.vocab_size, cfg.d_model, cfg.tie_embeddings, self.dtype
+            ),
+            "final_norm": rms_norm_params(cfg.d_model),
+        }
+        if self.n_m:
+            params["m_layers"] = _stack_init(
+                km, self.n_groups * self.n_m,
+                lambda k: block_params(k, cfg, "mlstm", self.dtype),
+            )
+        if self.n_s:
+            params["s_layers"] = _stack_init(
+                ks, self.n_groups * self.n_s,
+                lambda k: block_params(k, cfg, "slstm", self.dtype),
+            )
+        return params
+
+    def _grouped(self, params, name, n_per):
+        return jax.tree.map(
+            lambda a: a.reshape(self.n_groups, n_per, *a.shape[1:]), params[name]
+        )
+
+    def forward(self, params: Params, tokens: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+        x = constrain(x, "batch", None, None)
+        positions = jnp.arange(tokens.shape[1])
+        gm = self._grouped(params, "m_layers", self.n_m)
+        gs = self._grouped(params, "s_layers", self.n_s)
+
+        def group_body(x, gp):
+            mp, sp = gp
+            def m_body(x, lp):
+                x, _, _ = block_apply(lp, x, cfg, "mlstm", positions)
+                return x, None
+            x, _ = jax.lax.scan(_remat(m_body, cfg), x, mp)
+            def s_body(x, lp):
+                x, _, _ = block_apply(lp, x, cfg, "slstm", positions)
+                return x, None
+            x, _ = jax.lax.scan(_remat(s_body, cfg), x, sp)
+            return x, None
+
+        x, _ = jax.lax.scan(group_body, x, (gm, gs))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.vocab_size)
+        return constrain(logits, "batch", None, "model"), jnp.zeros((), jnp.float32)
+
+    def loss(self, params: Params, batch: Dict) -> Tuple[jax.Array, Dict]:
+        logits, _ = self.forward(params, batch["tokens"])
+        ce = cross_entropy(logits, batch["labels"])
+        return ce, {"ce": ce}
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> Cache:
+        cfg = self.cfg
+        m_one = mlstm_cache(cfg, batch)
+        s_one = slstm_cache(cfg, batch)
+        return {
+            "m": jax.tree.map(
+                lambda a: jnp.zeros((self.n_groups * self.n_m,) + a.shape, a.dtype),
+                m_one,
+            ),
+            "s": jax.tree.map(
+                lambda a: jnp.zeros((self.n_groups * self.n_s,) + a.shape, a.dtype),
+                s_one,
+            ),
+        }
+
+    def decode_step(self, params, cache: Cache, tokens, pos) -> Tuple[jax.Array, Cache]:
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+        positions = jnp.full((1,), pos, jnp.int32)
+        gm = self._grouped(params, "m_layers", self.n_m)
+        gs = self._grouped(params, "s_layers", self.n_s)
+        cm = jax.tree.map(
+            lambda a: a.reshape(self.n_groups, self.n_m, *a.shape[1:]), cache["m"]
+        )
+        cs = jax.tree.map(
+            lambda a: a.reshape(self.n_groups, self.n_s, *a.shape[1:]), cache["s"]
+        )
+
+        def group_body(x, args):
+            mp, sp, mc, sc = args
+            def m_body(x, lp_lc):
+                lp, lc = lp_lc
+                x, _, nc = block_apply(lp, x, cfg, "mlstm", positions, lc, pos)
+                return x, nc
+            x, new_mc = jax.lax.scan(m_body, x, (mp, mc))
+            def s_body(x, lp_lc):
+                lp, lc = lp_lc
+                x, _, nc = block_apply(lp, x, cfg, "slstm", positions, lc, pos)
+                return x, nc
+            x, new_sc = jax.lax.scan(s_body, x, (sp, sc))
+            return x, (new_mc, new_sc)
+
+        x, (ncm, ncs) = jax.lax.scan(group_body, x, (gm, gs, cm, cs))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x, cfg.vocab_size)[:, 0]
+        new_cache = {
+            "m": jax.tree.map(
+                lambda a: a.reshape(self.n_groups * self.n_m, *a.shape[2:]), ncm
+            ),
+            "s": jax.tree.map(
+                lambda a: a.reshape(self.n_groups * self.n_s, *a.shape[2:]), ncs
+            ),
+        }
+        return logits, new_cache

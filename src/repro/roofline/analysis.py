@@ -1,0 +1,167 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / link_bw       (per chip, per link)
+
+``compiled.cost_analysis()`` provides per-device FLOPs / bytes accessed
+(XLA compiles the per-device SPMD module).  Collective bytes are *not* in
+cost_analysis: ``collective_bytes`` parses the optimized per-device HLO and
+sums operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute ops (scan bodies are counted once per trip via the
+while-loop trip count when derivable; see _loop_multipliers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.core.cost import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"((?:\([^)]*\)|[\w\[\],{}\/ ]+?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M,
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes moved by each collective kind (output-shape accounting, the
+    standard convention for AG/AR volume), summed over the module.
+    ``-done`` ops are skipped so async pairs count once."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if m.group(0).rstrip("(").endswith("-done("):
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective bytes (sum kinds)
+    coll_by_kind: Dict[str, int]
+    model_flops: Optional[float] = None   # 6ND-style useful flops (global)
+    chips: int = 1
+    xla_flops: float = 0.0                # raw cost_analysis (scan-undercounted)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap bound: the dominant term is the step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> Optional[float]:
+        if not self.model_flops:
+            return None
+        return self.model_flops / self.chips / max(self.flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """MODEL_FLOPS-based MFU bound implied by the three terms."""
+        if not self.model_flops:
+            return None
+        ideal = self.model_flops / self.chips / PEAK_FLOPS_BF16
+        return ideal / max(self.step_s, 1e-30)
+
+    def summary(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s_bound": self.step_s,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(compiled, chips: int, model_flops: Optional[float] = None) -> Roofline:
+    """Build roofline terms from the compiled per-device SPMD module.
+
+    Primary accounting comes from the call-graph HLO analyzer
+    (repro.roofline.hlo_stats) because XLA's cost_analysis counts while
+    (scan) bodies once; cost_analysis is kept in the record as a cross-check
+    lower bound."""
+    from repro.roofline.hlo_stats import analyze
+
+    text = compiled.as_text()
+    stats = analyze(text)
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, list):
+        xla_cost = xla_cost[0] if xla_cost else {}
+    return Roofline(
+        flops=float(stats.flops),
+        hbm_bytes=float(stats.bytes),
+        coll_bytes=float(stats.coll_bytes),
+        coll_by_kind={k: int(v) for k, v in stats.coll.items()},
+        model_flops=model_flops,
+        chips=chips,
+        xla_flops=float(xla_cost.get("flops", 0.0)) if hasattr(xla_cost, "get") else 0.0,
+    )
+
+
+def train_model_flops(n_active_params: float, tokens: float) -> float:
+    return 6.0 * n_active_params * tokens
+
+
+def infer_model_flops(n_active_params: float, tokens: float) -> float:
+    return 2.0 * n_active_params * tokens

@@ -1,0 +1,399 @@
+"""Static analyzer for optimized HLO text: FLOPs, HBM bytes, collective
+bytes -- with while-loop (scan) bodies multiplied by their known trip
+counts.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits a while
+body ONCE, so every scanned-layer model under-counts by the layer count
+(verified: ratio = 1/L).  The optimized HLO, however, carries
+``backend_config={"known_trip_count":{"n":...}}`` on while ops, so an exact
+accounting is a call-graph walk:
+
+    cost(comp) = sum(direct op costs) + sum over calls:
+                   while : trip * (cost(body) + cost(cond))
+                   call/conditional : cost(callee)
+                   fusion: operands+output bytes only (internals are fused)
+
+Direct op costs:
+    dot          : 2 * prod(out dims) * prod(contracting dims) flops,
+                   operands+output bytes
+    fusion/elemwise: ~1 flop per output element; operands+output bytes
+    dynamic-(update-)slice: 2x slice size (in-place semantics)
+    collectives  : operand bytes by kind (start/done pairs counted once)
+    tuple/gte/bitcast/parameter/constant: free
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_ATOM = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*(.+?)\s*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED = re.compile(r"(?:body|condition|calls|to_apply|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "reshape",
+}
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_ATOM.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES}
+    )
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k in _COLLECTIVES:
+            self.coll[k] += o.coll[k]
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(
+            self.flops * m, self.bytes * m,
+            {k: v * m for k, v in self.coll.items()},
+        )
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    out_shape: str
+    kind: str
+    rest: str  # text after the opening paren
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op]
+    symbols: Dict[str, str]  # op/param name -> output shape string
+
+
+def _parse(text: str) -> Tuple[Dict[str, _Computation], Optional[str]]:
+    comps: Dict[str, _Computation] = {}
+    entry = None
+    cur: Optional[_Computation] = None
+    for raw in text.splitlines():
+        line = re.sub(r", metadata=\{[^}]*\}", "", raw)
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = _Computation(m.group(2), [], {})
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_LINE.match(line)
+        if not om:
+            continue
+        name, shape, kind, rest = om.groups()
+        cur.symbols[name] = shape
+        cur.ops.append(_Op(name, shape, kind, rest))
+    return comps, entry
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    _, out_b = _shape_elems_bytes(op.out_shape)
+    out_e, _ = _shape_elems_bytes(op.out_shape)
+    lhs_m = re.match(r"%?([\w.\-]+)", op.rest)
+    contract = 1
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if lhs_m and cm:
+        lhs_shape = comp.symbols.get(lhs_m.group(1), "")
+        am = _SHAPE_ATOM.search(lhs_shape)
+        if am:
+            dims = [int(d) for d in am.group(2).split(",") if d]
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contract *= dims[int(ci)]
+    return 2.0 * out_e * contract
+
+
+def _operand_bytes(op: _Op, comp: _Computation, skip=frozenset()) -> float:
+    total = 0.0
+    for nm in re.findall(r"%([\w.\-]+)", op.rest.split("), ")[0]):
+        if nm in skip:
+            continue
+        shape = comp.symbols.get(nm)
+        if shape:
+            _, b = _shape_elems_bytes(shape)
+            total += b
+    return total
+
+
+# v5e VMEM budget for loop-invariant residency: invariant carries smaller
+# than this stay on-chip across iterations and are fetched once, not per
+# trip (weight-stationary execution); larger invariants stream per trip.
+VMEM_RESIDENT_BYTES = 64 * 1024 * 1024
+
+
+def _fusion_dus_bytes(inner: _Computation) -> Optional[float]:
+    """If the fused computation is rooted in dynamic-update-slice(s) (scan
+    ys-stacking / in-place cache writes), return 2x the update-slab bytes;
+    else None.  The update operand is the DUS's second argument."""
+    if not inner or not inner.ops:
+        return None
+    roots = [op for op in inner.ops if op.kind == "dynamic-update-slice"]
+    if not roots or inner.ops[-1].kind not in ("dynamic-update-slice", "tuple"):
+        return None
+    if inner.ops[-1].kind == "tuple":
+        root_names = set(re.findall(r"%([\w.\-]+)", inner.ops[-1].rest))
+        if not all(r.name in root_names for r in roots):
+            return None
+        if len(root_names) != len(roots):
+            return None  # mixed roots: fall back to full accounting
+    total = 0.0
+    for r in roots:
+        args = re.findall(r"%([\w.\-]+)", r.rest)
+        if len(args) < 2:
+            return None
+        _, ub = _shape_elems_bytes(inner.symbols.get(args[1], ""))
+        if ub == 0:
+            return None
+        total += 2.0 * ub
+    return total
+
+
+def _invariant_gtes(comp: _Computation) -> Dict[str, int]:
+    """get-tuple-element ops of the loop carry that pass through the body
+    ROOT tuple unchanged -> {op name: byte size}."""
+    if not comp.ops:
+        return {}
+    root = comp.ops[-1]
+    if root.kind != "tuple":
+        return {}
+    root_elems = re.findall(r"%([\w.\-]+)", root.rest)
+    param_names = {o.name for o in comp.ops if o.kind == "parameter"}
+    out: Dict[str, int] = {}
+    for op in comp.ops:
+        if op.kind != "get-tuple-element":
+            continue
+        src = re.match(r"%?([\w.\-]+)", op.rest)
+        idxm = re.search(r"index=(\d+)", op.rest)
+        if not src or not idxm or src.group(1) not in param_names:
+            continue
+        idx = int(idxm.group(1))
+        if idx < len(root_elems) and root_elems[idx] == op.name:
+            _, b = _shape_elems_bytes(op.out_shape)
+            out[op.name] = b
+    return out
+
+
+def analyze(text: str, invariant_aware: bool = True) -> Cost:
+    """invariant_aware: loop-carried operands that pass through a while
+    body unchanged and fit VMEM_RESIDENT_BYTES are fetched once per loop,
+    not once per trip (TPU weight-stationary residency)."""
+    comps, entry = _parse(text)
+    if entry is None:
+        return Cost()
+    memo: Dict = {}
+
+    def cost_of(name: str, skip=frozenset()) -> Cost:
+        key = (name, skip)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        total = Cost()
+        if comp is None:
+            memo[key] = total
+            return total
+        memo[key] = total  # guards (benign) cycles
+        for op in comp.ops:
+            out_e, out_b = _shape_elems_bytes(op.out_shape)
+            kind = op.kind
+            base = kind.replace("-start", "").replace("-done", "")
+            if kind in _FREE_OPS:
+                continue
+            if base in _COLLECTIVES:
+                if kind.endswith("-done"):
+                    continue
+                total.coll[base] += out_b
+                total.bytes += out_b + _operand_bytes(op, comp, skip)
+                continue
+            if kind == "while":
+                trip = 1.0
+                tm = _TRIP.search(op.rest)
+                if tm:
+                    trip = float(tm.group(1))
+                called = re.findall(r"(?:body|condition)=%?([\w.\-]+)", op.rest)
+                resident: Dict[str, int] = {}
+                if invariant_aware:
+                    for c in called:
+                        sub = comps.get(c)
+                        if sub is None:
+                            continue
+                        for nm, b in _invariant_gtes(sub).items():
+                            if b <= VMEM_RESIDENT_BYTES:
+                                resident[nm] = b
+                for c in called:
+                    total += cost_of(c, frozenset(resident)).scaled(trip)
+                # one HBM fetch for each VMEM-resident invariant
+                total.bytes += float(sum(resident.values()))
+                continue
+            if kind in ("call", "custom-call", "conditional", "async-start"):
+                for grp in _CALLED.findall(op.rest):
+                    for c in re.split(r",\s*%?", grp):
+                        if c and kind != "custom-call":
+                            total += cost_of(c)
+                if kind == "custom-call":
+                    total.bytes += out_b + _operand_bytes(op, comp, skip)
+                continue
+            if kind == "fusion":
+                # internals fused: operands + output traffic, ~1 flop/elem,
+                # but count any dots living inside the fused computation
+                fm = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                inner = comps.get(fm.group(1)) if fm else None
+                dus_b = _fusion_dus_bytes(inner) if inner else None
+                if dus_b is not None:
+                    # in-place update fusion (scan ys-stacking, cache
+                    # writes): traffic is 2x the updated slab, not the
+                    # whole buffer
+                    total.bytes += dus_b
+                    total.flops += out_e if out_e < dus_b else dus_b
+                else:
+                    total.bytes += out_b + _operand_bytes(op, comp, skip)
+                    total.flops += out_e
+                if inner:
+                    for iop in inner.ops:
+                        if iop.kind == "dot":
+                            total.flops += _dot_flops(iop, inner)
+                continue
+            if kind == "dot":
+                total.flops += _dot_flops(op, comp)
+                total.bytes += out_b + _operand_bytes(op, comp, skip)
+                continue
+            if kind in ("dynamic-update-slice",):
+                # in-place: read+write of the update slab
+                upd = op.rest.split(",")
+                ub = 0.0
+                if len(upd) >= 2:
+                    nm = re.search(r"%([\w.\-]+)", upd[1])
+                    if nm:
+                        _, ub = _shape_elems_bytes(comp.symbols.get(nm.group(1), ""))
+                total.bytes += 2 * (ub or out_b)
+                continue
+            if kind in ("dynamic-slice", "gather", "scatter", "copy",
+                        "slice", "concatenate", "pad", "transpose",
+                        "broadcast", "reduce", "reduce-window", "sort",
+                        "convert", "select-and-scatter"):
+                total.bytes += out_b + (
+                    _operand_bytes(op, comp, skip)
+                    if kind in ("reduce", "concatenate", "sort")
+                    else out_b
+                )
+                total.flops += out_e
+                continue
+            # generic elementwise
+            total.bytes += out_b + _operand_bytes(op, comp, skip)
+            total.flops += out_e
+        memo[key] = total
+        return total
+
+    # fusion-called computations are reached only via their call sites; the
+    # recursion above handles that, starting from ENTRY.
+    return cost_of(entry)
+
+
+def analyze_by_shape(text: str, top: int = 20, invariant_aware: bool = True):
+    """Profile view: (op kind, output shape) -> total bytes with loop
+    multipliers -- the dry-run's substitute for a wall-clock profile.
+    Returns a sorted list of (key, bytes)."""
+    comps, entry = _parse(text)
+    if entry is None:
+        return []
+    acc: Dict[str, float] = {}
+
+    def add(key: str, b: float):
+        acc[key] = acc.get(key, 0.0) + b
+
+    def walk(name: str, mult: float, skip=frozenset()):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            out_e, out_b = _shape_elems_bytes(op.out_shape)
+            kind = op.kind
+            base = kind.replace("-start", "").replace("-done", "")
+            if kind in _FREE_OPS or kind.endswith("-done"):
+                continue
+            if kind == "while":
+                trip = 1.0
+                tm = _TRIP.search(op.rest)
+                if tm:
+                    trip = float(tm.group(1))
+                called = re.findall(r"(?:body|condition)=%?([\w.\-]+)", op.rest)
+                res: Dict[str, int] = {}
+                if invariant_aware:
+                    for c in called:
+                        sub = comps.get(c)
+                        if sub:
+                            for nm, b in _invariant_gtes(sub).items():
+                                if b <= VMEM_RESIDENT_BYTES:
+                                    res[nm] = b
+                for c in called:
+                    walk(c, mult * trip, frozenset(res))
+                add("invariant-residency", sum(res.values()) * mult)
+                continue
+            if kind in ("call", "conditional"):
+                for grp in _CALLED.findall(op.rest):
+                    for c in re.split(r",\s*%?", grp):
+                        if c:
+                            walk(c, mult)
+                continue
+            shape_key = op.out_shape.split("{")[0]
+            if base in _COLLECTIVES:
+                add(f"COLL:{base} {shape_key}", out_b * mult)
+                continue
+            if kind == "dynamic-update-slice":
+                add(f"{kind} {shape_key}", 2 * out_b * mult)
+                continue
+            b = out_b + _operand_bytes(op, comp, skip)
+            add(f"{kind} {shape_key}", b * mult)
+
+    walk(entry, 1.0)
+    return sorted(acc.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,7 @@
+"""Runtime: training loop (fault tolerance), serving, elastic re-meshing,
+mesh-context sharding helpers.
+
+Submodules are imported directly (``from repro.runtime import train``
+style) rather than eagerly here: ``runtime.sharding`` is a leaf dependency
+of the layer/data packages and eager imports would cycle.
+"""

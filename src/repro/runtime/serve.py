@@ -1,0 +1,72 @@
+"""Serving runtime: batched greedy/temperature decoding over the KV cache.
+
+``generate`` drives model.decode_step with a single jit'd step (position is
+a traced scalar, so one compile serves the whole generation).  Prompts are
+consumed through the same step (teacher forcing) -- robust across every
+model family here, including the recurrent ones whose prefill is the
+recurrence itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 => greedy
+    max_seq: int = 256
+
+
+def generate(
+    model, params, prompts: np.ndarray, cfg: ServeConfig,
+    key: Optional[jax.Array] = None,
+) -> np.ndarray:
+    """prompts: (B, S_prompt) int32 -> (B, S_prompt + max_new_tokens)."""
+    b, sp = prompts.shape
+    cache = model.init_cache(b, cfg.max_seq)
+    step_fn = jax.jit(model.decode_step)
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    tokens = jnp.asarray(prompts, jnp.int32)
+    out = [tokens]
+    if hasattr(model, "prefill"):
+        # one-pass prompt ingestion through the cached path (DecoderLM)
+        logits, cache = jax.jit(model.prefill)(params, cache, tokens)
+    else:
+        logits = None
+        for t in range(sp):
+            logits, cache = step_fn(params, cache, tokens[:, t : t + 1],
+                                    jnp.int32(t))
+    cur = _sample(logits, cfg, key)
+    out.append(cur[:, None])
+    for t in range(sp, sp + cfg.max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = step_fn(params, cache, cur[:, None], jnp.int32(t))
+        cur = _sample(logits, cfg, sub)
+        out.append(cur[:, None])
+    return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def _sample(logits: jax.Array, cfg: ServeConfig, key) -> jax.Array:
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / cfg.temperature, axis=-1).astype(
+        jnp.int32
+    )
+
+
+def batch_requests(prompt_list, pad_id: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Left-pad a list of variable-length prompts into one batch."""
+    maxlen = max(len(p) for p in prompt_list)
+    batch = np.full((len(prompt_list), maxlen), pad_id, np.int32)
+    lens = np.zeros(len(prompt_list), np.int32)
+    for i, pr in enumerate(prompt_list):
+        batch[i, maxlen - len(pr):] = pr
+        lens[i] = len(pr)
+    return batch, lens

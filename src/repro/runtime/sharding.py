@@ -1,0 +1,62 @@
+"""Mesh context + activation sharding constraints.
+
+Models are mesh-agnostic: they call ``constrain(x, "batch", None, "model")``
+with *logical* axes; inside a ``use_mesh`` context these resolve to the
+physical mesh ("batch" -> every data-parallel axis present: ("pod","data")
+multi-pod, ("data",) single-pod) and become with_sharding_constraint; with
+no mesh active (CPU smoke tests) they are identity.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: ContextVar[Optional[Mesh]] = ContextVar("repro_mesh", default=None)
+
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    token = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+def resolve_axis(logical, mesh: Mesh):
+    if logical == "batch":
+        axes = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+        return axes if axes else None
+    if logical == "model":
+        return MODEL_AXIS if MODEL_AXIS in mesh.axis_names else None
+    if logical == "data":
+        return "data" if "data" in mesh.axis_names else None
+    return logical
+
+
+def logical_spec(*logical_axes) -> Tuple:
+    return logical_axes
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """Apply a sharding constraint given logical axis names (or None)."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    spec = P(*(resolve_axis(a, mesh) for a in logical_axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *logical_axes) -> NamedSharding:
+    return NamedSharding(mesh, P(*(resolve_axis(a, mesh) for a in logical_axes)))

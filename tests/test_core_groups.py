@@ -1,0 +1,183 @@
+"""Group machinery: laws, wreath products, Lemmas 3-5, fat-tree, hex."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fattree import FatTreeSchedule
+from repro.core.groups import (CyclicGroup, HexLattice, Permutation,
+                               ProductGroup, WreathTreeElement,
+                               fat_tree_group_size, sigma_subgroup)
+from repro.core.hexarray import HexSchedule
+from repro.core.homomorphism import (AbelianHom, hom_exists_perm_to_cyclic,
+                                     is_prime, lemma3_imprimitive_in_kernel,
+                                     lemma5_q_divides_t)
+from repro.core.zorder import (block_reuse_distance_traffic, morton_decode3,
+                               morton_encode3, rowmajor_schedule,
+                               zorder_schedule)
+
+perms = st.integers(0, 5039).map(
+    lambda n: _nth_permutation(n, 7)
+)
+
+
+def _nth_permutation(n, q):
+    items = list(range(q))
+    out = []
+    import math
+    for i in range(q, 0, -1):
+        f = math.factorial(i - 1)
+        idx, n = divmod(n, f)
+        out.append(items.pop(idx % len(items)))
+    return Permutation(tuple(out))
+
+
+@settings(max_examples=50, deadline=None)
+@given(a=perms, b=perms)
+def test_permutation_group_laws(a, b):
+    assert a.compose(a.inverse()).is_identity()
+    assert a.compose(b).inverse().image == b.inverse().compose(a.inverse()).image
+    assert a.order() >= 1
+    assert a.power(a.order()).is_identity()
+
+
+def test_sigma_subgroup_is_cyclic_transitive():
+    q = 5
+    sig = sigma_subgroup(q)
+    assert len(sig) == q
+    # transitive: orbit of 0 is everything
+    assert {p(0) for p in sig} == set(range(q))
+
+
+class TestLemmas:
+    @pytest.mark.parametrize("q", [3, 5, 7])
+    def test_lemma3(self, q):
+        # imprimitive: product of disjoint transpositions / short cycles
+        sigma = Permutation.from_cycles(q, [[0, 1]])
+        assert not sigma.is_primitive()
+        assert lemma3_imprimitive_in_kernel(sigma, q)
+
+    def test_primitive_admits_nontrivial_hom(self):
+        q = 5
+        sigma = Permutation.cyclic_shift(q)
+        assert sigma.is_primitive()
+        assert hom_exists_perm_to_cyclic(sigma, q, 1)
+
+    def test_lemma5(self):
+        assert lemma5_q_divides_t(5, 10)
+        assert not lemma5_q_divides_t(5, 12)
+
+    def test_is_prime(self):
+        assert [p for p in range(20) if is_prime(p)] == [2, 3, 5, 7, 11, 13, 17, 19]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    orders=st.tuples(st.sampled_from([2, 3, 4, 6]), st.sampled_from([2, 3, 4, 6])),
+    data=st.data(),
+)
+def test_abelian_hom_well_defined(orders, data):
+    target = ProductGroup((6, 6))
+    images = tuple(
+        data.draw(st.tuples(st.integers(0, 5), st.integers(0, 5)))
+        for _ in orders
+    )
+    hom = AbelianHom(tuple(orders), target, images)
+    if hom.is_well_defined():
+        # spot-check rho(a+b) = rho(a)+rho(b) via exponent linearity
+        e1 = data.draw(st.tuples(st.integers(0, 5), st.integers(0, 5)))
+        e2 = data.draw(st.tuples(st.integers(0, 5), st.integers(0, 5)))
+        lhs = hom.apply([a + b for a, b in zip(e1, e2)])
+        rhs = target.add(hom.apply(e1), hom.apply(e2))
+        assert lhs == rhs
+
+
+class TestWreath:
+    def test_identity(self):
+        e = WreathTreeElement.identity(3)
+        assert all(e.apply(i) == i for i in range(8))
+
+    def test_level_swaps(self):
+        root = WreathTreeElement.level_swap(3, 3, 0)
+        assert root.apply(0) == 4 and root.apply(5) == 1
+        leaf = WreathTreeElement.level_swap(3, 1, 0)
+        assert leaf.apply(0) == 1 and leaf.apply(1) == 0 and leaf.apply(2) == 2
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def test_compose_roundtrip(self, data):
+        k = 3
+        def rand_elem():
+            sw = []
+            for l in range(1, k + 1):
+                sw.append(tuple(
+                    data.draw(st.integers(0, 1)) for _ in range(2 ** (k - l))
+                ))
+            return WreathTreeElement(k, tuple(sw))
+        a, b = rand_elem(), rand_elem()
+        c = a.compose(b)
+        for i in range(2 ** k):
+            assert c.apply(i) == a.apply(b.apply(i))
+
+    def test_group_size(self):
+        assert fat_tree_group_size(2) == 8  # 2^(4-1)
+        assert fat_tree_group_size(3) == 128
+
+
+class TestFatTree:
+    @pytest.mark.parametrize("d", [1, 2, 3])
+    def test_valid(self, d):
+        assert FatTreeSchedule(d=d).validate()
+
+    def test_paper_cost_claims(self):
+        """Sec. 4.2: A moves n^2 across the top link; C never moves."""
+        ft = FatTreeSchedule(d=2)
+        assert ft.top_level_words() == ft.n ** 2
+        # C stationary: position depends only on (k, i)
+        for i in range(ft.n):
+            for k in range(ft.n):
+                assert ft.pos_C(k, i) == ft.pos_C(k, i)
+
+    def test_base_case_matches_fig11(self):
+        """d=1: 4 procs, 2 steps, 8 instructions; C_ki at proc (k,i)."""
+        ft = FatTreeSchedule(d=1)
+        cells = {ft.f(i, j, k) for i in range(2) for j in range(2) for k in range(2)}
+        assert len(cells) == 8
+
+
+class TestHex:
+    def test_systolic_properties(self):
+        props = HexSchedule(q=5).systolic_properties()
+        assert all(props.values())
+
+    def test_simulation_correct(self):
+        hs = HexSchedule(q=6)
+        A, B = np.random.rand(6, 6), np.random.rand(6, 6)
+        np.testing.assert_allclose(hs.simulate(A, B), hs.reference(A, B), rtol=1e-10)
+
+    def test_completion_time(self):
+        assert HexSchedule(q=4).num_steps == 10  # 3q - 2
+
+
+class TestZOrder:
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(0, 4095))
+    def test_morton_roundtrip(self, code):
+        i, j, k = morton_decode3(code)
+        assert morton_encode3(i, j, k) == code
+
+    @pytest.mark.parametrize("g", [(4, 4, 4), (3, 5, 2), (8, 1, 8)])
+    def test_complete_traversal(self, g):
+        order = zorder_schedule(*g)
+        assert len(set(order)) == g[0] * g[1] * g[2]
+
+    def test_zorder_beats_rowmajor(self):
+        """Sec. 4.3: the space-bounded order's cache traffic beats the naive
+        order whenever the cache is small relative to the working set (the
+        cache-oblivious regime; when a whole operand fits, both are
+        near-optimal and the claim is vacuous)."""
+        g = 16  # operands are 256 blocks each
+        z = zorder_schedule(g, g, g)
+        r = rowmajor_schedule(g, g, g)
+        for cache in (48, 192):
+            assert (block_reuse_distance_traffic(z, cache)
+                    < block_reuse_distance_traffic(r, cache))

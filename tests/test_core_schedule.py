@@ -1,0 +1,154 @@
+"""The paper's algebra: equivariant schedules, the solver, cost claims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TorusSchedule, Torus25DSchedule, cannon_schedule,
+                        is_cannon_like, solve_torus, torus_hops)
+from repro.core.cost import (bandwidth_lower_bound, cannon_comm_total,
+                             schedule_25d_cost, torus_schedule_cost)
+from repro.core.schedule import VAR_INDEX
+
+
+class TestCannon:
+    def test_embedding(self):
+        assert cannon_schedule(5).is_embedding()
+
+    def test_movements_are_paper_solution(self):
+        cs = cannon_schedule(7)
+        mv = cs.movements()
+        assert mv["C"] == (0, 0)                      # C stationary
+        assert torus_hops(mv["A"], 7) == 1            # A one hop per step
+        assert torus_hops(mv["B"], 7) == 1            # B one hop per step
+
+    def test_skewed_placement(self):
+        """l_A from the solved diagram reproduces Cannon's classic skew
+        A_ij -> P_{i, j-i} (up to the anchor)."""
+        q = 5
+        pl = cannon_schedule(q).placement("A")
+        for i in range(q):
+            for j in range(q):
+                assert tuple(pl[i, j]) == (i, (j - i) % q)
+
+    def test_validate(self):
+        assert cannon_schedule(5).validate()
+
+    def test_correct_execution(self):
+        """Execute the schedule literally: every instruction at its (x,y,t)
+        cell; verify C = A@B and the one-instruction-per-cell property."""
+        q = 4
+        cs = cannon_schedule(q)
+        A = np.random.rand(q, q)
+        B = np.random.rand(q, q)
+        C = np.zeros((q, q))
+        seen = set()
+        for i in range(q):
+            for j in range(q):
+                for k in range(q):
+                    cell = cs.f(i, j, k)
+                    assert cell not in seen
+                    seen.add(cell)
+                    C[k, i] += A[i, j] * B[j, k]
+        np.testing.assert_allclose(C, (A @ B).T, rtol=1e-10)
+
+
+class TestSolver:
+    def test_minimal_cost_is_two(self):
+        """Paper Sec. 4.1: movement cost can vanish for at most one of
+        A, B, C => the optimum is two one-hop movers."""
+        sols = solve_torus(5)
+        assert sols and sols[0].hop_cost == 2
+        assert is_cannon_like(sols[0])
+
+    def test_exact_cannon_recovered(self):
+        q = 5
+        cs = cannon_schedule(q)
+        sols = solve_torus(q)
+        assert any(s.schedule.M == cs.M for s in sols if s.hop_cost == 2)
+
+    def test_at_most_one_stationary(self):
+        from repro.core.solver import at_most_one_stationary
+        assert at_most_one_stationary(3)
+
+    @pytest.mark.parametrize("q", [3, 5])
+    def test_all_solutions_valid(self, q):
+        for sol in solve_torus(q, max_solutions=25):
+            assert sol.schedule.validate()
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    q=st.sampled_from([3, 5, 7]),
+    rows=st.tuples(*[st.tuples(*[st.integers(-1, 1)] * 3)] * 3),
+    i=st.integers(0, 6), j=st.integers(0, 6), k=st.integers(0, 6),
+)
+def test_equivariance_property(q, rows, i, j, k):
+    """For ANY generator-image matrix M (valid or not as a schedule), the
+    induced map is equivariant: f(sigma_1^a sigma_2^b sigma_3^c . x) =
+    rho(...)^.. . f(x) -- i.e. f is linear in (i,j,k) over (Z_q^2, Z_t)."""
+    sched = TorusSchedule(q=q, t=q, M=tuple(tuple(v % q for v in r) for r in rows))
+    i, j, k = i % q, j % q, k % q
+    base = sched.f(0, 0, 0)
+    shifted = sched.f(i, j, k)
+    (x1, y1, t1), (x2, y2, t2), (x3, y3, t3) = sched.M
+    expect = (
+        (base[0] + i * x1 + j * x2 + k * x3) % q,
+        (base[1] + i * y1 + j * y2 + k * y3) % q,
+        (base[2] + i * t1 + j * t2 + k * t3) % q,
+    )
+    assert shifted == expect
+
+
+@settings(max_examples=40, deadline=None)
+@given(q=st.sampled_from([3, 5]), var=st.sampled_from(["A", "B", "C"]))
+def test_movement_consistency(q, var):
+    """If a movement homomorphism exists, the data placement it induces is
+    consistent: the variable needed by instruction (i,j,k) is at the
+    instruction's processor at the instruction's time."""
+    cs = cannon_schedule(q)
+    mv = cs.movement(var)
+    pl = cs.placement(var)
+    (p0, p1), absent = VAR_INDEX[var]
+    for i in range(q):
+        for j in range(q):
+            for k in range(q):
+                x, y, t = cs.f(i, j, k)
+                idx = (i, j, k)
+                r, s = idx[p0], idx[p1]
+                # position at time t = placement + t * mv
+                px = (pl[r, s][0] + t * mv[0]) % q
+                py = (pl[r, s][1] + t * mv[1]) % q
+                assert (px, py) == (x, y)
+
+
+class Test25D:
+    def test_occupancy_and_reduction(self):
+        s = Torus25DSchedule(q=8, c=2)
+        cells = {}
+        for i in range(8):
+            for j in range(8):
+                for k in range(8):
+                    cells[s.f(i, j, k)] = cells.get(s.f(i, j, k), 0) + 1
+        assert max(cells.values()) == 1
+        # contraction slabs partition [q]
+        slabs = [s.layer_contraction_slab(z) for z in range(2)]
+        assert slabs == [(0, 4), (4, 8)]
+
+    def test_comm_beats_cannon_when_memory_allows(self):
+        n, q, c = 4096, 8, 4
+        assert q % c == 0
+        c25 = schedule_25d_cost(Torus25DSchedule(q=q, c=c), n)
+        cannon = torus_schedule_cost(cannon_schedule(q), n)
+        # per-node words should drop roughly by sqrt(c) (paper Sec. D.1)
+        assert c25.words_per_node < cannon.words_per_node / c * q / q * 1.5
+
+
+class TestLowerBounds:
+    def test_cannon_within_constant_of_bound(self):
+        n, p = 4096, 64
+        M = n * n / p  # one block per variable (Cannon's memory regime)
+        per_node = cannon_comm_total(n, p) / p
+        lb = bandwidth_lower_bound(n, p, M)
+        assert lb > 0
+        assert per_node >= lb
+        assert per_node <= 16 * lb  # constant-factor optimal

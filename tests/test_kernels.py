@@ -1,0 +1,89 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, mha
+from repro.kernels.matmul import matmul, matmul_ref, zorder_matmul
+from repro.kernels.matmul.kernel import default_blocks, vmem_working_set_bytes
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 1e-4
+
+
+class TestZOrderMatmul:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [
+        (128, 128, 128), (256, 384, 512), (200, 300, 260), (512, 128, 384),
+    ])
+    def test_against_oracle(self, shape, dtype):
+        m, k, n = shape
+        a = jax.random.normal(jax.random.PRNGKey(0), (m, k), dtype)
+        b = jax.random.normal(jax.random.PRNGKey(1), (k, n), dtype)
+        out = matmul(a, b, block_m=128, block_n=128, block_k=128, interpret=True)
+        ref = matmul_ref(a, b)
+        err = jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
+        scale = jnp.max(jnp.abs(ref.astype(jnp.float32))) + 1e-6
+        assert float(err / scale) < _tol(dtype)
+
+    @pytest.mark.parametrize("order", ["zorder", "rowmajor"])
+    def test_orders_agree(self, order):
+        a = jax.random.normal(jax.random.PRNGKey(2), (256, 256), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(3), (256, 256), jnp.float32)
+        out = zorder_matmul(a, b, block_m=128, block_n=128, block_k=128,
+                            order=order, interpret=True)
+        assert jnp.allclose(out, matmul_ref(a, b), atol=1e-3)
+
+    def test_default_blocks_fit_vmem(self):
+        for dims in [(4096, 4096, 4096), (128, 32768, 256), (8192, 512, 8192)]:
+            bm, bn, bk = default_blocks(*dims)
+            assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+            assert vmem_working_set_bytes(bm, bn, bk) < 128 * 1024 * 1024
+
+    def test_tiny_fallback(self):
+        a = jax.random.normal(jax.random.PRNGKey(4), (8, 16), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(5), (16, 8), jnp.float32)
+        assert jnp.allclose(matmul(a, b), a @ b, atol=1e-5)
+
+
+class TestFlashAttention:
+    def _ref(self, q, k, v, **kw):
+        B, S, H, D = q.shape
+        qh = q.transpose(0, 2, 1, 3).reshape(-1, S, D)
+        kh = k.transpose(0, 2, 1, 3).reshape(-1, k.shape[1], D)
+        vh = v.transpose(0, 2, 1, 3).reshape(-1, v.shape[1], D)
+        o = attention_ref(qh, kh, vh, **kw)
+        return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+    def test_causal_gqa(self, hq, hkv, dtype):
+        B, S, D = 2, 256, 32
+        q = jax.random.normal(jax.random.PRNGKey(0), (B, S, hq, D), dtype)
+        k = jax.random.normal(jax.random.PRNGKey(1), (B, S, hkv, D), dtype)
+        v = jax.random.normal(jax.random.PRNGKey(2), (B, S, hkv, D), dtype)
+        out = mha(q, k, v, causal=True, block_q=128, block_kv=128, interpret=True)
+        ref = self._ref(q, k, v, causal=True)
+        err = jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
+        assert float(err) < (0.05 if dtype == jnp.bfloat16 else 1e-4)
+
+    @pytest.mark.parametrize("window", [64, 200])
+    def test_sliding_window(self, window):
+        B, S, H, D = 1, 384, 2, 32
+        q = jax.random.normal(jax.random.PRNGKey(3), (B, S, H, D), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(4), (B, S, H, D), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(5), (B, S, H, D), jnp.float32)
+        out = mha(q, k, v, causal=True, window=window,
+                  block_q=128, block_kv=128, interpret=True)
+        ref = self._ref(q, k, v, causal=True, window=window)
+        assert float(jnp.max(jnp.abs(out - ref))) < 1e-4
+
+    def test_unaligned_query_length(self):
+        B, S, H, D = 1, 300, 2, 32
+        q = jax.random.normal(jax.random.PRNGKey(6), (B, S, H, D), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(7), (B, 512, H, D), jnp.float32)
+        v = jax.random.normal(jax.random.PRNGKey(8), (B, 512, H, D), jnp.float32)
+        out = mha(q, k, v, causal=True, block_q=128, block_kv=128, interpret=True)
+        ref = self._ref(q, k, v, causal=True)
+        assert float(jnp.max(jnp.abs(out - ref))) < 1e-4

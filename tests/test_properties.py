@@ -1,0 +1,103 @@
+"""Hypothesis property tests on system-level invariants."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import Torus25DSchedule, TorusSchedule, torus_hops
+from repro.core.zorder import zorder_schedule
+from repro.dist.api import estimate
+from repro.layers.embed import padded_vocab
+
+
+@settings(max_examples=60, deadline=None)
+@given(q=st.sampled_from([4, 6, 8, 12]), c=st.sampled_from([1, 2, 4]))
+def test_25d_partition_property(q, c):
+    """Every instruction lands in exactly one (x, y, z, step) cell and each
+    layer's contraction slab covers [q] exactly once."""
+    if q % c:
+        return
+    s = Torus25DSchedule(q=q, c=c)
+    seen = set()
+    for i in range(q):
+        for j in range(q):
+            for k in range(q):
+                cell = s.f(i, j, k)
+                assert cell not in seen
+                seen.add(cell)
+                x, y, z, step = cell
+                lo, hi = s.layer_contraction_slab(z)
+                assert lo <= j < hi
+    assert len(seen) == q ** 3
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    q=st.sampled_from([3, 5, 7]),
+    vec=st.tuples(st.integers(-20, 20), st.integers(-20, 20)),
+)
+def test_torus_hops_metric(q, vec):
+    """torus_hops is a metric compatible with the group: symmetric under
+    negation, zero only at identity, bounded by q."""
+    h = torus_hops(vec, q)
+    hn = torus_hops((-vec[0], -vec[1]), q)
+    assert h == hn
+    assert 0 <= h <= q
+    assert (h == 0) == (vec[0] % q == 0 and vec[1] % q == 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(256, 65536), n=st.integers(256, 16384),
+    k=st.integers(256, 16384), tp=st.sampled_from([4, 8, 16]),
+)
+def test_cost_model_invariants(m, n, k, tp):
+    """Ring variants never cost more than their unoverlapped counterparts;
+    costs are positive and monotone in the matmul volume."""
+    for pair in (("xla_ag", "ring_ag"), ("xla_rs", "ring_rs")):
+        plain = estimate(pair[0], m, n, k, tp)
+        ring = estimate(pair[1], m, n, k, tp)
+        assert ring.total_s <= plain.total_s + 1e-12
+        assert plain.compute_s > 0 and plain.comm_s >= 0
+    small = estimate("xla_ag", m, n, k, tp).total_s
+    big = estimate("xla_ag", 2 * m, n, k, tp).total_s
+    assert big >= small
+
+
+@settings(max_examples=40, deadline=None)
+@given(g=st.tuples(st.integers(1, 9), st.integers(1, 9), st.integers(1, 9)))
+def test_zorder_is_permutation(g):
+    order = zorder_schedule(*g)
+    assert len(order) == g[0] * g[1] * g[2]
+    assert len(set(order)) == len(order)
+    assert all(0 <= i < g[0] and 0 <= j < g[1] and 0 <= k < g[2]
+               for i, j, k in order)
+
+
+@settings(max_examples=80, deadline=None)
+@given(v=st.integers(1, 1_000_000))
+def test_padded_vocab_properties(v):
+    p = padded_vocab(v)
+    assert p >= v and p % 256 == 0 and p - v < 256
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    q=st.sampled_from([3, 5]),
+    rows=st.tuples(*[st.tuples(*[st.integers(-1, 1)] * 3)] * 3),
+)
+def test_valid_schedules_have_consistent_movement(q, rows):
+    """For any embedding schedule whose diagrams are solvable, re-deriving
+    the absent-index constraint holds: (x_a, y_a) == t_a * mu (mod q)."""
+    sched = TorusSchedule(q=q, t=q, M=tuple(tuple(v % q for v in r) for r in rows))
+    if not sched.is_embedding():
+        return
+    moves = sched.movements()
+    if moves is None:
+        return
+    from repro.core.schedule import VAR_INDEX
+    for var, mv in moves.items():
+        _, absent = VAR_INDEX[var]
+        xa, ya, ta = sched.M[absent]
+        assert (ta * mv[0] - xa) % q == 0
+        assert (ta * mv[1] - ya) % q == 0
