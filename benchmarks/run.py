@@ -6,8 +6,16 @@ bench_results.json for the experiment index.
 from __future__ import annotations
 
 import json
+import os
 import sys
 import traceback
+
+# allow `python benchmarks/run.py` (not just -m benchmarks.run): the import
+# below needs the repo root, and the benches need src/ for repro
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main() -> None:

@@ -1,0 +1,138 @@
+"""Minimal, dependency-free stand-in for the slice of the hypothesis API
+the test-suite uses: ``given``, ``settings``, ``assume``, and
+``strategies.{integers, sampled_from, tuples, data}``.
+
+Installed by ``tests/conftest.py`` ONLY when the real hypothesis package is
+absent (the declared dev-dependency in pyproject.toml is preferred).  It
+does deterministic pseudo-random sampling seeded per test -- no shrinking,
+no database, no health checks -- which keeps the property tests meaningful
+and reproducible in hermetic environments.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+import zlib
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume() to discard the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(100):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise _Unsatisfied()
+        return SearchStrategy(draw)
+
+    def example(self):
+        return self._draw(random.Random(0))
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    seq = list(elements)
+    return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def tuples(*strategies) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s._draw(rng) for s in strategies))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.randrange(2)))
+
+
+def lists(elements: SearchStrategy, *, min_size=0, max_size=10) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: [elements._draw(rng)
+                     for _ in range(rng.randint(min_size, max_size))])
+
+
+class DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy._draw(self._rng)
+
+
+def data() -> SearchStrategy:
+    return SearchStrategy(lambda rng: DataObject(rng))
+
+
+class settings:
+    """Decorator recording max_examples; deadline/suppress args ignored."""
+
+    def __init__(self, max_examples: int = 100, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_settings = self
+        return fn
+
+
+def given(*given_args, **given_kwargs):
+    def decorate(fn):
+        # NOTE: no functools.wraps -- pytest follows __wrapped__ into the
+        # original signature and would demand the property args as fixtures.
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_stub_settings", None)
+            n = cfg.max_examples if cfg else 25
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            ran = 0
+            for _ in range(n * 4):
+                if ran >= n:
+                    break
+                try:
+                    pos = tuple(s._draw(rng) for s in given_args)
+                    kw = {k: s._draw(rng) for k, s in given_kwargs.items()}
+                    fn(*args, *pos, **kw, **kwargs)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.is_hypothesis_test = True
+        return wrapper
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` + ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "tuples", "booleans", "lists",
+                 "data", "SearchStrategy"):
+        setattr(strat, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = strat
+    hyp.__is_repro_stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

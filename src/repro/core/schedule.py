@@ -143,6 +143,70 @@ class TorusSchedule:
                 out[r, s] = (x, y)
         return out
 
+    # -- lowering hooks consumed by repro.dist ------------------------------
+    # A torus device (x, y) flattens to x * q + y -- row-major with the first
+    # mesh axis major, matching jax.lax.ppermute over a ("x", "y") axis tuple.
+    # "Canonical" layout is the matrix-block layout under PartitionSpec(x, y):
+    # A_ij at (i, j) and B_jk at (j, k) match their paper coordinates (r, s),
+    # but the output C is indexed (k, i) in the paper while its matrix block
+    # row is i -- so C's canonical device is the swap (s, r).
+
+    def _canonical_device(self, var: VarName, r: int, s: int) -> Tuple[int, int]:
+        return (s, r) if var == "C" else (r, s)
+
+    def movement_perm(self, var: VarName) -> Optional[list]:
+        """(src, dst) flat-device pairs for ONE time step of ``var``: the
+        block on node nu moves to nu + mu.  This is the literal ``perm``
+        argument repro.dist feeds to ppermute each step."""
+        mv = self.movement(var)
+        if mv is None:
+            return None
+        mx, my = mv
+        q = self.q
+        return [
+            (x * q + y, ((x + mx) % q) * q + (y + my) % q)
+            for x in range(q)
+            for y in range(q)
+        ]
+
+    def placement_perm(self, var: VarName) -> Optional[list]:
+        """(src, dst) flat-device pairs taking the canonical block layout
+        (block (r, s) on device (r, s), i.e. PartitionSpec(x, y)) to the
+        schedule's initial placement l_I -- Cannon's skew, executed as a
+        single ppermute over the flattened (x, y) axes."""
+        pl = self.placement(var)
+        if pl is None:
+            return None
+        q = self.q
+        pairs = []
+        for r in range(q):
+            for s in range(q):
+                cx, cy = self._canonical_device(var, r, s)
+                pairs.append((cx * q + cy, int(pl[r, s, 0]) * q + int(pl[r, s, 1])))
+        return pairs
+
+    def collection_perm(self, var: VarName, after_steps: int) -> Optional[list]:
+        """Inverse layout ppermute: (src, dst) pairs returning ``var`` from
+        its position after ``after_steps`` movement steps back to the
+        canonical block layout.  Identity perms are returned as [] so the
+        executor can skip the collective."""
+        pl = self.placement(var)
+        mv = self.movement(var)
+        if pl is None or mv is None:
+            return None
+        q = self.q
+        pairs = []
+        identity = True
+        for r in range(q):
+            for s in range(q):
+                x = (int(pl[r, s, 0]) + after_steps * mv[0]) % q
+                y = (int(pl[r, s, 1]) + after_steps * mv[1]) % q
+                cx, cy = self._canonical_device(var, r, s)
+                if (x, y) != (cx, cy):
+                    identity = False
+                pairs.append((x * q + y, cx * q + cy))
+        return [] if identity else pairs
+
     # -- cost hooks ----------------------------------------------------------
     def hop_cost(self, var: VarName) -> Optional[int]:
         mv = self.movement(var)

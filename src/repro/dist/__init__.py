@@ -1,0 +1,40 @@
+"""repro.dist -- schedule-execution engine.
+
+Lowers the equivariant schedules of ``repro.core`` (solutions of the
+paper's commutative-diagram equations) to executable shard_map/ppermute
+programs:
+
+  cannon    -- the solver's Cannon solution run verbatim: placement perms
+               for the skew, movement-homomorphism perms for the shifts
+  summa     -- the broadcast (all-gather) stationary-C contrast strategy
+  pod25d    -- Torus25DSchedule's replicate--compute--reduce over a pod
+               axis, composable with an in-layer strategy (cannon25d)
+  ring      -- the 1-D torus solutions: all-gather / reduce-scatter
+               decomposed into one-hop ppermute chains overlapped with
+               per-chunk matmuls
+  api       -- analytic cost model (estimate), strategy selection (choose),
+               and dispatch (symmetric_matmul)
+
+Local block multiplies route through the Pallas matmul kernel on TPU/GPU
+and jnp.matmul with fp32 accumulation elsewhere (repro.dist.local).
+"""
+from repro import jax_compat as _jax_compat
+
+_jax_compat.install()
+
+from .api import (Estimate, applicable_strategies, choose, estimate,  # noqa: E402
+                  symmetric_matmul)
+from .cannon import (cannon_matmul, executed_shift_vectors,  # noqa: E402
+                     lowered_plan, torus_schedule_matmul)
+from .local import local_matmul  # noqa: E402
+from .pod25d import cannon25d_matmul, pod25d_matmul  # noqa: E402
+from .ring import ring_ag_matmul, ring_rs_matmul  # noqa: E402
+from .summa import summa_matmul  # noqa: E402
+
+__all__ = [
+    "Estimate", "applicable_strategies", "choose", "estimate",
+    "symmetric_matmul", "cannon_matmul", "executed_shift_vectors",
+    "lowered_plan", "torus_schedule_matmul", "local_matmul",
+    "cannon25d_matmul", "pod25d_matmul", "ring_ag_matmul", "ring_rs_matmul",
+    "summa_matmul",
+]

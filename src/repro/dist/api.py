@@ -1,0 +1,203 @@
+"""Strategy cost model + auto-dispatch for the dist matmul engines.
+
+``estimate`` prices a strategy with the paper's word-counting applied to the
+TPU constants in ``repro.core.cost`` (ICI link bandwidth, peak MXU flops):
+compute time is the per-device share of 2mnk flops, communication time is
+the strategy's per-device received bytes over one ICI link, and overlapped
+strategies (the ring/ppermute family) pay max(compute, comm) instead of the
+sum -- that inequality is exactly why the one-hop solutions win.
+
+``choose`` ranks the strategies applicable to a device count / mesh
+topology and returns the cheapest; ``symmetric_matmul`` dispatches a global
+matmul through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cost as _cost
+from repro.jax_compat import shard_map
+
+from .cannon import cannon_matmul
+from .local import local_matmul
+from .pod25d import cannon25d_matmul, pod25d_matmul
+from .ring import ring_ag_matmul, ring_rs_matmul
+from .summa import summa_matmul
+
+STRATEGIES = (
+    "cannon", "summa", "cannon25d", "pod25d",
+    "ring_ag", "ring_rs", "xla_ag", "xla_rs", "local",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimate:
+    """Analytic cost record for one (strategy, problem, parallelism) cell."""
+
+    strategy: str
+    m: int
+    n: int
+    k: int
+    tp: int
+    compute_s: float
+    comm_s: float
+    comm_bytes: float
+    overlapped: bool
+
+    @property
+    def total_s(self) -> float:
+        if self.overlapped:
+            return max(self.compute_s, self.comm_s)
+        return self.compute_s + self.comm_s
+
+
+def _square_side(tp: int) -> Optional[int]:
+    q = int(math.isqrt(tp))
+    return q if q * q == tp and q > 1 else None
+
+
+def _pod_factor(tp: int) -> Optional[tuple]:
+    """Largest c > 1 with tp = q^2 * c and q > 1, preferring small pods."""
+    best = None
+    for c in (2, 3, 4, 8):
+        if tp % c:
+            continue
+        q = _square_side(tp // c)
+        if q:
+            best = (q, c)
+            break
+    return best
+
+
+def estimate(strategy: str, m: int, n: int, k: int, tp: int,
+             dtype_bytes: int = 2) -> Estimate:
+    """Analytic cost of ``strategy`` for an (m, k) x (k, n) matmul on ``tp``
+    devices.  ``total_s`` = max(compute, comm) for overlapped strategies,
+    sum otherwise."""
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
+    compute_s = 2.0 * m * n * k / tp / _cost.PEAK_FLOPS_BF16
+    overlapped = strategy in ("ring_ag", "ring_rs", "cannon", "cannon25d")
+    if strategy == "local" or tp == 1:
+        comm_bytes = 0.0
+    elif strategy in ("xla_ag", "ring_ag"):
+        # gather the row-sharded (m, k) operand: receive (tp-1)/tp of it
+        comm_bytes = dtype_bytes * m * k * (tp - 1) / tp
+    elif strategy in ("xla_rs", "ring_rs"):
+        # reduce-scatter the (m, n) partial output
+        comm_bytes = dtype_bytes * m * n * (tp - 1) / tp
+    elif strategy in ("cannon", "summa"):
+        q = _square_side(tp) or max(int(math.isqrt(tp)), 2)
+        # per device: (q-1) block panels of A and of B
+        comm_bytes = dtype_bytes * (q - 1) * ((m / q) * (k / q) + (k / q) * (n / q))
+    elif strategy in ("pod25d", "cannon25d"):
+        qc = _pod_factor(tp) or (_square_side(tp) or 2, 1)
+        q, c = qc
+        shift = (q - 1) * ((m / q) * (k / (c * q)) + (k / (c * q)) * (n / q))
+        reduce_c = (c - 1) / c * (m / q) * (n / q) * 2  # replicate + reduce C
+        comm_bytes = dtype_bytes * (shift + reduce_c)
+    else:  # pragma: no cover
+        raise AssertionError(strategy)
+    comm_s = comm_bytes / _cost.ICI_BW
+    return Estimate(strategy, m, n, k, tp, compute_s, comm_s, comm_bytes,
+                    overlapped)
+
+
+def applicable_strategies(tp: int) -> tuple:
+    """Strategies executable on ``tp`` devices (topology permitting)."""
+    if tp <= 1:
+        return ("local",)
+    out = ["ring_ag", "ring_rs"]
+    if _square_side(tp):
+        out += ["cannon", "summa"]
+    if _pod_factor(tp):
+        out += ["cannon25d", "pod25d"]
+    return tuple(out)
+
+
+def choose(m: int, n: int, k: int, *, tp: Optional[int] = None, mesh=None,
+           dtype_bytes: int = 2) -> str:
+    """Pick the cheapest applicable strategy for the problem shape and mesh
+    topology (or bare device count ``tp``)."""
+    if mesh is not None:
+        tp = mesh.size
+        axes = len(mesh.axis_names)
+        if tp == 1:
+            return "local"
+        if axes == 1:
+            # 1-D torus: move whichever tensor is smaller around the ring
+            return "ring_ag" if m * k <= m * n else "ring_rs"
+        if axes == 2:
+            sizes = [mesh.shape[nm] for nm in mesh.axis_names]
+            return "cannon" if sizes[0] == sizes[1] else "summa"
+        names = mesh.axis_names
+        if mesh.shape[names[1]] == mesh.shape[names[2]]:
+            return "cannon25d"
+        return "pod25d"  # rectangular in-layer axes: SUMMA in-layer
+    if tp is None:
+        raise ValueError("choose() needs tp= or mesh=")
+    cands = applicable_strategies(tp)
+    est = [estimate(s, m, n, k, tp, dtype_bytes) for s in cands]
+    return min(est, key=lambda e: (e.total_s, cands.index(e.strategy))).strategy
+
+
+def symmetric_matmul(a: jax.Array, b: jax.Array, *, mesh=None,
+                     strategy: Optional[str] = None,
+                     out_dtype=None) -> jax.Array:
+    """Global (M, K) x (K, N) matmul dispatched through the strategy picked
+    from mesh topology and problem shape (or forced via ``strategy``)."""
+    m, k = a.shape
+    n = b.shape[-1]
+    if mesh is None or mesh.size == 1:
+        return local_matmul(a, b, out_dtype=out_dtype)
+    if strategy is None:
+        strategy = choose(m, n, k, mesh=mesh)
+    if strategy in ("cannon", "summa"):
+        names = list(mesh.axis_names)
+        fn = cannon_matmul if strategy == "cannon" else summa_matmul
+        return fn(a, b, mesh=mesh, axis_x=names[0], axis_y=names[1],
+                  out_dtype=out_dtype)
+    if strategy in ("pod25d", "cannon25d"):
+        names = list(mesh.axis_names)
+        if strategy == "cannon25d":
+            return cannon25d_matmul(a, b, mesh=mesh, pod_axis=names[0],
+                                    axis_x=names[1], axis_y=names[2],
+                                    out_dtype=out_dtype)
+        return pod25d_matmul(a, b, mesh=mesh, pod_axis=names[0],
+                             out_dtype=out_dtype)
+    if strategy in ("ring_ag", "ring_rs"):
+        from .cannon import _pad_to
+
+        axis = mesh.axis_names[0]
+        t = mesh.shape[axis]
+        if strategy == "ring_ag":
+            # sharded dims: m (rows of a) and n (cols of b); zero-pad + slice
+            ap, bp = _pad_to(a, (t, 1)), _pad_to(b, (1, t))
+            f = shard_map(
+                lambda xl, wl: ring_ag_matmul(xl, wl, axis,
+                                              out_dtype=out_dtype),
+                mesh=mesh,
+                in_specs=(P(axis, None), P(None, axis)),
+                out_specs=P(None, axis),
+            )
+            out = f(ap, bp)
+        else:
+            # sharded dims: the contraction k and the output rows m
+            ap, bp = _pad_to(a, (t, t)), _pad_to(b, (t, 1))
+            f = shard_map(
+                lambda yl, wl: ring_rs_matmul(yl, wl, axis,
+                                              out_dtype=out_dtype),
+                mesh=mesh,
+                in_specs=(P(None, axis), P(axis, None)),
+                out_specs=P(axis, None),
+            )
+            out = f(ap, bp)
+        return out[:m, :n] if out.shape != (m, n) else out
+    if strategy == "local":
+        return local_matmul(a, b, out_dtype=out_dtype)
+    raise ValueError(f"cannot dispatch strategy {strategy!r}")

@@ -1,0 +1,141 @@
+"""Execute equivariant torus schedules as shard_map/ppermute programs.
+
+This is the algebra->execution bridge: a valid ``TorusSchedule`` (a solution
+of the paper's commutative-diagram equations, e.g. out of
+``repro.core.solver``) is lowered to a data-parallel program whose every
+data movement is a ``ppermute`` whose permutation comes verbatim from the
+schedule:
+
+  * the initial skew is ``schedule.placement_perm(var)`` -- the schedule's
+    l_I layout (for Cannon, the classic A_ij -> P_{i, j-i} skew),
+  * each time step shifts A/B/C by ``schedule.movement_perm(var)`` -- the
+    movement homomorphism mu translated to (src, dst) device pairs,
+  * the output is collected by ``schedule.collection_perm("C", t-1)``
+    (identity for stationary-C schedules like Cannon, and then skipped).
+
+``cannon_matmul`` is the engine applied to ``cannon_schedule(q)``; any other
+valid solver solution executes through ``torus_schedule_matmul`` unchanged.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.schedule import TorusSchedule, cannon_schedule
+from repro.jax_compat import shard_map
+
+from .local import local_matmul
+
+
+def lowered_plan(schedule: TorusSchedule) -> Dict:
+    """The complete ppermute program for ``schedule``: per-step shift
+    vectors, one-step movement perms, initial-skew perms, and the final
+    C-collection perm.  Everything the executor runs comes from here."""
+    moves = schedule.movements()
+    if moves is None:
+        raise ValueError("schedule has no consistent movement homomorphisms")
+    return {
+        "q": schedule.q,
+        "steps": schedule.t,
+        "shifts": moves,  # {var: (mu_x, mu_y)} -- the solver's solution
+        "skew": {v: schedule.placement_perm(v) for v in ("A", "B")},
+        "step_perm": {v: schedule.movement_perm(v) for v in ("A", "B", "C")},
+        "collect_C": schedule.collection_perm("C", schedule.t - 1),
+    }
+
+
+def executed_shift_vectors(q: int) -> Dict[str, Tuple[int, int]]:
+    """Per-step (dx, dy) each variable set moves in ``cannon_matmul`` -- by
+    construction the movement homomorphisms of the solver's Cannon solution
+    (pinned by tests/test_dist_consistency.py)."""
+    return lowered_plan(cannon_schedule(q))["shifts"]
+
+
+def _is_identity(perm) -> bool:
+    return perm is None or all(src == dst for src, dst in perm)
+
+
+def _permute(x, axes, perm):
+    if _is_identity(perm):
+        return x
+    return lax.ppermute(x, axes, perm)
+
+
+def _pad_to(x: jax.Array, mults: Tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(hi for _, hi in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def torus_body(schedule: TorusSchedule, axis_x: str, axis_y: str):
+    """shard_map body executing ``schedule`` on local (M/q, K/q) x (K/q, N/q)
+    blocks; returns the fp32 accumulator in canonical C layout.  Shared by
+    cannon_matmul and the in-layer phase of cannon25d_matmul."""
+    plan = lowered_plan(schedule)
+    axes = (axis_x, axis_y)
+
+    def body(ab, bb):
+        ab = _permute(ab, axes, plan["skew"]["A"])
+        bb = _permute(bb, axes, plan["skew"]["B"])
+        acc = jnp.zeros((ab.shape[0], bb.shape[1]), jnp.float32)
+        for step in range(plan["steps"]):
+            acc = acc + local_matmul(ab, bb, out_dtype=jnp.float32)
+            if step < plan["steps"] - 1:
+                ab = _permute(ab, axes, plan["step_perm"]["A"])
+                bb = _permute(bb, axes, plan["step_perm"]["B"])
+                acc = _permute(acc, axes, plan["step_perm"]["C"])
+        return _permute(acc, axes, plan["collect_C"])
+
+    return body
+
+
+def torus_schedule_matmul(a: jax.Array, b: jax.Array,
+                          schedule: TorusSchedule, *, mesh,
+                          axis_x: str = "x", axis_y: str = "y",
+                          out_dtype=None) -> jax.Array:
+    """Global (M, K) x (K, N) matmul executing ``schedule`` on the q x q
+    torus spanned by mesh axes (axis_x, axis_y).  Operands are zero-padded
+    to block multiples and the result sliced back."""
+    q = schedule.q
+    if mesh.shape[axis_x] != q or mesh.shape[axis_y] != q:
+        raise ValueError(
+            f"mesh axes ({mesh.shape[axis_x]}, {mesh.shape[axis_y]}) "
+            f"do not span the schedule's {q} x {q} torus")
+    if schedule.t != q:
+        raise ValueError("executor supports the t = q schedule family")
+    if out_dtype is None:
+        out_dtype = jnp.result_type(a.dtype, b.dtype)
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+    ap = _pad_to(a, (q, q))
+    bp = _pad_to(b, (q, q))
+
+    body = torus_body(schedule, axis_x, axis_y)
+    f = shard_map(
+        lambda ab, bb: body(ab, bb).astype(out_dtype),
+        mesh=mesh,
+        in_specs=(P(axis_x, axis_y), P(axis_x, axis_y)),
+        out_specs=P(axis_x, axis_y),
+    )
+    out = f(ap, bp)
+    if out.shape != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def cannon_matmul(a: jax.Array, b: jax.Array, *, mesh,
+                  axis_x: str = "x", axis_y: str = "y",
+                  out_dtype=None) -> jax.Array:
+    """Cannon's algorithm as the executed solver solution: skewed initial
+    layout + one-hop A/B shifts, all ppermutes from ``cannon_schedule(q)``."""
+    q = mesh.shape[axis_x]
+    return torus_schedule_matmul(
+        a, b, cannon_schedule(q), mesh=mesh,
+        axis_x=axis_x, axis_y=axis_y, out_dtype=out_dtype)

@@ -1,0 +1,36 @@
+"""Local (per-device) block matmul shared by every dist strategy.
+
+On TPU/GPU large 2-D blocks route through the Pallas Z-order matmul kernel
+(repro.kernels.matmul); everywhere else -- CPU backends, batched operands,
+blocks too small to tile -- the fallback is ``jnp.matmul`` with fp32
+accumulation, which is also the numerics contract the tests pin.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_PALLAS_MIN_TILE = 128
+
+
+def _pallas_eligible(a: jax.Array, b: jax.Array) -> bool:
+    if jax.default_backend() not in ("tpu", "gpu"):
+        return False
+    if a.ndim != 2 or b.ndim != 2:
+        return False
+    m, k = a.shape
+    n = b.shape[-1]
+    return min(m, n, k) >= _PALLAS_MIN_TILE
+
+
+def local_matmul(a: jax.Array, b: jax.Array, *, out_dtype=None) -> jax.Array:
+    """``a @ b`` with fp32 accumulation, Pallas-accelerated when possible."""
+    if out_dtype is None:
+        out_dtype = jnp.result_type(a.dtype, b.dtype)
+    if _pallas_eligible(a, b):
+        from repro.kernels.matmul import matmul as pallas_matmul
+
+        # out_dtype forwarded so fp32 accumulators stay fp32 end-to-end:
+        # the kernel's scratch is fp32 and must not round through a.dtype
+        return pallas_matmul(a, b, out_dtype=out_dtype)
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)

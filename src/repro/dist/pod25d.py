@@ -1,0 +1,129 @@
+"""2.5D strategies: replicate--compute--reduce over a pod axis (Sec. D.1).
+
+``Torus25DSchedule`` splits the contraction index j = j_c * (q/c) + j_t: the
+c-part selects a pod layer (each layer owns a contraction slab), the t-part
+runs an in-layer 2-D schedule, and C is reduced over the pod axis at the
+end.  Here the pod split composes with either in-layer strategy:
+
+  pod25d_matmul    -- slab matmul per layer (SUMMA in-layer when the mesh
+                      also has 2-D axes), then psum over the pod axis
+  cannon25d_matmul -- in-layer Cannon on the slab (the executed
+                      ``cannon_schedule(q)`` ppermute program of
+                      repro.dist.cannon), then psum over the pod axis
+
+The replication half of the trade (each layer holding a full copy of its
+operand panels) is expressed by the in_specs: operands are sharded over
+(pod x in-layer) axes jointly, so each layer starts with exactly its slab
+and no cross-layer broadcast is needed beyond XLA's initial layout.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.schedule import cannon_schedule
+from repro.jax_compat import shard_map
+
+from .cannon import _pad_to, torus_body
+from .local import local_matmul
+
+
+def _inlayer_axes(mesh, pod_axis: str, axis_x: Optional[str],
+                  axis_y: Optional[str]) -> Tuple[Optional[str], Optional[str]]:
+    if axis_x is not None and axis_y is not None:
+        return axis_x, axis_y
+    rest = [nm for nm in mesh.axis_names if nm != pod_axis]
+    if len(rest) >= 2:
+        return rest[0], rest[1]
+    return None, None
+
+
+def pod25d_matmul(a: jax.Array, b: jax.Array, *, mesh,
+                  pod_axis: str = "pod",
+                  axis_x: Optional[str] = None, axis_y: Optional[str] = None,
+                  out_dtype=None) -> jax.Array:
+    """Global matmul with the contraction split over ``pod_axis``.  When the
+    mesh carries two more axes the in-layer phase is SUMMA over them;
+    otherwise each layer multiplies its full slab locally."""
+    c = mesh.shape[pod_axis]
+    if out_dtype is None:
+        out_dtype = jnp.result_type(a.dtype, b.dtype)
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+    ax, ay = _inlayer_axes(mesh, pod_axis, axis_x, axis_y)
+
+    if ax is None:
+        ap = _pad_to(a, (1, c))
+        bp = _pad_to(b, (c, 1))
+
+        def body(ab, bb):
+            part = local_matmul(ab, bb, out_dtype=jnp.float32)
+            return lax.psum(part, pod_axis).astype(out_dtype)
+
+        f = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(None, pod_axis), P(pod_axis, None)),
+            out_specs=P(None, None),
+        )
+        out = f(ap, bp)
+        return out[:m, :n] if out.shape != (m, n) else out
+
+    qx, qy = mesh.shape[ax], mesh.shape[ay]
+    ap = _pad_to(a, (qx, c * qx * qy))
+    bp = _pad_to(b, (c * qx * qy, qy))
+
+    def body(ab, bb):
+        # within layer z: A cols / B rows cover contraction slab z
+        arow = lax.all_gather(ab, ay, axis=1, tiled=True)  # (M/qx, K/c)
+        bcol = lax.all_gather(bb, ax, axis=0, tiled=True)  # (K/c, N/qy)
+        part = local_matmul(arow, bcol, out_dtype=jnp.float32)
+        return lax.psum(part, pod_axis).astype(out_dtype)
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(ax, (pod_axis, ay)), P((pod_axis, ax), ay)),
+        out_specs=P(ax, ay),
+    )
+    out = f(ap, bp)
+    return out[:m, :n] if out.shape != (m, n) else out
+
+
+def cannon25d_matmul(a: jax.Array, b: jax.Array, *, mesh,
+                     pod_axis: str = "pod",
+                     axis_x: str = "x", axis_y: str = "y",
+                     out_dtype=None) -> jax.Array:
+    """2.5D with in-layer Cannon: each pod layer executes the solver's
+    ``cannon_schedule(q)`` ppermute program on its contraction slab, and C
+    partial sums reduce over the pod axis."""
+    c = mesh.shape[pod_axis]
+    q = mesh.shape[axis_x]
+    if mesh.shape[axis_y] != q:
+        raise ValueError("in-layer Cannon needs a square (q x q) layer")
+    if out_dtype is None:
+        out_dtype = jnp.result_type(a.dtype, b.dtype)
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+    ap = _pad_to(a, (q, c * q))
+    bp = _pad_to(b, (c * q, q))
+
+    inner = torus_body(cannon_schedule(q), axis_x, axis_y)
+
+    def body(ab, bb):
+        acc = inner(ab, bb)
+        return lax.psum(acc, pod_axis).astype(out_dtype)
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis_x, (pod_axis, axis_y)), P((pod_axis, axis_x), axis_y)),
+        out_specs=P(axis_x, axis_y),
+    )
+    out = f(ap, bp)
+    return out[:m, :n] if out.shape != (m, n) else out

@@ -1,0 +1,91 @@
+"""Ring collective matmuls: 1-D torus solutions of the paper's equations.
+
+On a 1-D torus the equivariance equations admit exactly the one-hop shift
+solutions; executed, they are the classic ring algorithms.  Both functions
+run INSIDE ``shard_map`` over a single named axis and decompose the
+all-gather / reduce-scatter into a chain of one-hop ``ppermute`` steps, each
+overlapped with the matmul of the chunk currently resident -- XLA's
+latency-hiding scheduler turns the permute chain into async
+collective-permute-start/done pairs running under the per-chunk matmuls
+(the paper's Sec. 5 future-work item (f)).
+
+Layout contracts (local shards, ``axis`` the ring axis of size t):
+
+  ring_ag_matmul : x (..., S/t, D) row-sharded, w (D, F/t) col-sharded
+                   -> (..., S, F/t)   ("all-gather then matmul", fused)
+  ring_rs_matmul : y (..., S, F/t) col-sharded, w (F/t, D) row-sharded
+                   -> (..., S/t, D)   ("matmul then reduce-scatter", fused)
+
+Both support 2-D and batched 3-D left operands.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .local import local_matmul
+
+
+def _ring_perm(n: int):
+    """One-hop +1 shift on the ring: the mu = 1 movement homomorphism."""
+    return [(d, (d + 1) % n) for d in range(n)]
+
+
+def ring_ag_matmul(x: jax.Array, w: jax.Array, axis: str, *,
+                   out_dtype=None) -> jax.Array:
+    """Fused all-gather(x) @ w_local over ring axis ``axis``.
+
+    Each of the t steps multiplies the resident x-chunk against the local
+    weight shard and writes the product into its global row slot, while the
+    chunk ring-shifts one hop for the next step.
+    """
+    n = lax.psum(1, axis)
+    idx = lax.axis_index(axis)
+    if out_dtype is None:
+        out_dtype = jnp.result_type(x.dtype, w.dtype)
+    chunk = x.shape[-2]
+    out_shape = x.shape[:-2] + (n * chunk, w.shape[-1])
+    out = jnp.zeros(out_shape, out_dtype)
+    perm = _ring_perm(n)
+    cur = x
+    for s in range(n):
+        # issue the permute first so it overlaps the matmul below
+        nxt = lax.ppermute(cur, axis, perm) if s < n - 1 else None
+        prod = local_matmul(cur, w, out_dtype=out_dtype)
+        src = (idx - s) % n  # origin device of the resident chunk
+        start = (0,) * (len(out_shape) - 2) + (src * chunk, 0)
+        out = lax.dynamic_update_slice(out, prod, start)
+        cur = nxt
+    return out
+
+
+def ring_rs_matmul(y: jax.Array, w: jax.Array, axis: str, *,
+                   out_dtype=None) -> jax.Array:
+    """Fused (y @ w_local) reduce-scatter over ring axis ``axis``.
+
+    The local partial product is full-height; the reduction walks the ring
+    accumulating the row-chunk destined for each device, one hop per step.
+    """
+    n = lax.psum(1, axis)
+    idx = lax.axis_index(axis)
+    if out_dtype is None:
+        out_dtype = jnp.result_type(y.dtype, w.dtype)
+    partial = local_matmul(y, w, out_dtype=jnp.float32)
+    rows = partial.shape[-2]
+    if rows % n:
+        raise ValueError(f"rows {rows} not divisible by ring size {n}")
+    chunk = rows // n
+    slab = partial.shape[:-2] + (chunk, partial.shape[-1])
+    perm = _ring_perm(n)
+    acc: Optional[jax.Array] = None
+    for s in range(n):
+        c = (idx + n - 1 - s) % n  # chunk index this device contributes now
+        start = (0,) * (len(slab) - 2) + (c * chunk, 0)
+        mine = lax.dynamic_slice(partial, start, slab)
+        acc = mine if acc is None else acc + mine
+        if s < n - 1:
+            acc = lax.ppermute(acc, axis, perm)
+    return acc.astype(out_dtype)

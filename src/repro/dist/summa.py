@@ -1,0 +1,55 @@
+"""SUMMA: the broadcast-based stationary-C strategy, for contrast with
+Cannon's permute chains.
+
+SUMMA's per-step row/column panel broadcasts, summed over the q steps, are
+exactly a tiled all-gather of A along the mesh columns and of B along the
+mesh rows -- which is how XLA lowers them on a torus -- so the engine emits
+the fused form: two all-gathers plus one local matmul.  Same asymptotic
+words as Cannon (each device receives (q-1)/q of a row + column panel) but
+as monolithic all-gathers, not overlappable one-hop permutes; the HLO
+difference is visible in examples/distributed_matmul.py.
+
+Unlike Cannon, SUMMA tolerates rectangular meshes (axis_x != axis_y sizes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.jax_compat import shard_map
+
+from .cannon import _pad_to
+from .local import local_matmul
+
+
+def summa_matmul(a: jax.Array, b: jax.Array, *, mesh,
+                 axis_x: str = "x", axis_y: str = "y",
+                 out_dtype=None) -> jax.Array:
+    """Global (M, K) x (K, N) matmul, SUMMA-scheduled over (axis_x, axis_y)."""
+    qx, qy = mesh.shape[axis_x], mesh.shape[axis_y]
+    if out_dtype is None:
+        out_dtype = jnp.result_type(a.dtype, b.dtype)
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+    # K is split by qy on A's columns and by qx on B's rows
+    ap = _pad_to(a, (qx, qx * qy))
+    bp = _pad_to(b, (qx * qy, qy))
+
+    def body(ab, bb):
+        arow = lax.all_gather(ab, axis_y, axis=1, tiled=True)  # (M/qx, K)
+        bcol = lax.all_gather(bb, axis_x, axis=0, tiled=True)  # (K, N/qy)
+        return local_matmul(arow, bcol, out_dtype=out_dtype)
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis_x, axis_y), P(axis_x, axis_y)),
+        out_specs=P(axis_x, axis_y),
+    )
+    out = f(ap, bp)
+    if out.shape != (m, n):
+        out = out[:m, :n]
+    return out

@@ -1,0 +1,40 @@
+"""Version shims for the jax API surface this repo targets.
+
+The codebase (tests included) is written against the modern spelling
+``jax.shard_map`` / ``jax.make_mesh``.  On older installed jax (0.4.x)
+``shard_map`` still lives in ``jax.experimental.shard_map``; installing the
+alias keeps every call site on the new spelling without touching them.
+
+``shard_map`` here defaults ``check_rep=False``: the dist engines produce
+outputs whose replication (e.g. a ring all-gather that ends fully written on
+every device) cannot be statically inferred by the checker.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+try:  # modern jax: the real thing
+    _native_shard_map = jax.shard_map  # type: ignore[attr-defined]
+except AttributeError:
+    _native_shard_map = None
+
+if _native_shard_map is None:
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    @functools.wraps(_experimental_shard_map)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_rep=False, **kwargs):
+        kwargs.pop("check_vma", None)  # newer-jax spelling of check_rep
+        return _experimental_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_rep, **kwargs,
+        )
+else:
+    shard_map = _native_shard_map
+
+
+def install() -> None:
+    """Idempotently expose ``jax.shard_map`` on jax versions that lack it."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map

@@ -18,7 +18,9 @@ _MIN_TILE = 128
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_n", "block_k", "order", "interpret")
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "order", "interpret",
+                     "out_dtype"),
 )
 def matmul(
     a: jax.Array,
@@ -29,12 +31,13 @@ def matmul(
     block_k: int | None = None,
     order: str = "zorder",
     interpret: bool = False,
+    out_dtype=None,
 ) -> jax.Array:
     m, k = a.shape
     k2, n = b.shape
     assert k == k2
     if min(m, n, k) < _MIN_TILE:
-        return matmul_ref(a, b)
+        return matmul_ref(a, b, out_dtype=out_dtype)
     dbytes = jnp.dtype(a.dtype).itemsize
     bm, bn, bk = default_blocks(m, n, k, dbytes)
     bm, bn, bk = block_m or bm, block_n or bn, block_k or bk
@@ -45,7 +48,7 @@ def matmul(
     bp = jnp.pad(b, ((0, pk), (0, pn))) if (pk or pn) else b
     out = zorder_matmul(
         ap, bp, block_m=bm, block_n=bn, block_k=bk, order=order,
-        interpret=interpret, out_dtype=a.dtype,
+        interpret=interpret, out_dtype=out_dtype or a.dtype,
     )
     if pm or pn:
         out = out[:m, :n]

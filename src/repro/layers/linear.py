@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.dist.local import local_matmul
+
 
 def linear_params(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
     scale = 1.0 / (d_in ** 0.5)
@@ -14,5 +16,7 @@ def linear(x: jax.Array, w: jax.Array) -> jax.Array:
     """x @ w with fp32 accumulation.  The GSPMD baseline path: sharding of w
     (and hence the collective schedule) comes from the param PartitionSpecs;
     ring strategies replace this call inside shard_map blocks (see
-    repro.dist.api.symmetric_matmul)."""
-    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    repro.dist.api.symmetric_matmul).  The local multiply routes through
+    repro.dist.local (Pallas kernel on TPU/GPU, fp32-accumulating jnp
+    elsewhere)."""
+    return local_matmul(x, w, out_dtype=x.dtype)

@@ -1,0 +1,17 @@
+"""repro.roofline -- static HLO analysis + roofline cost terms.
+
+  analysis  -- Roofline terms (compute/memory/collective seconds) from the
+               compiled dry-run artifact
+  hlo_stats -- call-graph walk over optimized HLO text: FLOPs, HBM bytes,
+               collective bytes with while-loop trip multipliers
+"""
+from repro import jax_compat as _jax_compat
+
+_jax_compat.install()
+
+from . import analysis, hlo_stats  # noqa: E402
+from .analysis import Roofline  # noqa: E402
+from .hlo_stats import Cost, analyze, analyze_by_shape  # noqa: E402
+
+__all__ = ["analysis", "hlo_stats", "Roofline", "Cost", "analyze",
+           "analyze_by_shape"]

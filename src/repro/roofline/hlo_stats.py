@@ -140,7 +140,9 @@ def _parse(text: str) -> Tuple[Dict[str, _Computation], Optional[str]]:
 def _dot_flops(op: _Op, comp: _Computation) -> float:
     _, out_b = _shape_elems_bytes(op.out_shape)
     out_e, _ = _shape_elems_bytes(op.out_shape)
-    lhs_m = re.match(r"%?([\w.\-]+)", op.rest)
+    # operands print either bare (dot(%x, %y)) or typed
+    # (dot(f32[..] %x, f32[..] %y)) depending on the XLA dialect
+    lhs_m = re.search(r"%([\w.\-]+)", op.rest) or re.match(r"([\w.\-]+)", op.rest)
     contract = 1
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
     if lhs_m and cm:

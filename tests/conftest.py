@@ -1,0 +1,22 @@
+"""Shared test configuration.
+
+Puts ``src/`` on sys.path (so ``python -m pytest`` works without the
+PYTHONPATH export) and, when the real ``hypothesis`` package is not
+installed, registers the in-repo deterministic fallback so the property
+tests still collect and run (see src/repro/_hypothesis_stub.py; the real
+package is the declared dev-dependency and wins when present).
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro._hypothesis_stub import install
+
+    install()

@@ -1,0 +1,67 @@
+"""Solver <-> executor consistency.
+
+The contract of repro.dist.cannon: the ppermute program it runs IS the
+solver's solution -- shift vectors equal the movement homomorphisms, the
+skew equals the schedule's initial placement, and the lowered (src, dst)
+pairs are exactly the mu translations on the flattened torus.  Plus cost
+model sanity: estimates are monotone in problem size.
+"""
+import pytest
+
+from repro.core.schedule import cannon_schedule
+from repro.dist.api import applicable_strategies, estimate
+from repro.dist.cannon import executed_shift_vectors, lowered_plan
+
+
+@pytest.mark.parametrize("q", [2, 3, 4, 5, 8])
+def test_cannon_executed_shifts_equal_solver_movements(q):
+    sched = cannon_schedule(q)
+    assert executed_shift_vectors(q) == sched.movements()
+    # the lowered one-step ppermute pairs are exactly the mu translation
+    for var in ("A", "B", "C"):
+        mu = sched.movement(var)
+        for src, dst in sched.movement_perm(var):
+            sx, sy = divmod(src, q)
+            dx, dy = divmod(dst, q)
+            assert ((dx - sx) % q, (dy - sy) % q) == mu
+
+
+@pytest.mark.parametrize("q", [2, 3, 4])
+def test_cannon_skew_is_schedule_placement(q):
+    sched = cannon_schedule(q)
+    pl = sched.placement("A")
+    plb = sched.placement("B")
+    for r in range(q):
+        for s in range(q):
+            # classic skews: A_ij -> P_{i, j-i}, B_jk -> P_{j-k, k}
+            assert tuple(pl[r, s]) == (r, (s - r) % q)
+            assert tuple(plb[r, s]) == ((r - s) % q, s)
+    plan = lowered_plan(sched)
+    # Cannon's C is stationary and already in canonical layout: the
+    # collection perm must be elided (empty) so no collective is emitted
+    assert plan["collect_C"] == []
+    # A's skew perm maps canonical (r, s) to placement (r, (s-r) % q)
+    for src, dst in plan["skew"]["A"]:
+        r, s = divmod(src, q)
+        assert dst == r * q + (s - r) % q
+
+
+@pytest.mark.parametrize("strategy", ["xla_ag", "ring_ag", "xla_rs",
+                                      "ring_rs", "cannon", "summa",
+                                      "cannon25d"])
+def test_estimate_monotone_in_problem_size(strategy):
+    tp = 16
+    base = estimate(strategy, 1024, 1024, 1024, tp).total_s
+    assert base > 0
+    for grow in ((2048, 1024, 1024), (1024, 2048, 1024), (1024, 1024, 2048)):
+        assert estimate(strategy, *grow, tp).total_s >= base
+
+
+def test_overlapped_never_slower_and_applicability():
+    m, n, k, tp = 8192, 4096, 4096, 16
+    for plain, ring in (("xla_ag", "ring_ag"), ("xla_rs", "ring_rs")):
+        assert estimate(ring, m, n, k, tp).total_s <= \
+            estimate(plain, m, n, k, tp).total_s + 1e-12
+    assert applicable_strategies(1) == ("local",)
+    assert "cannon" in applicable_strategies(16)
+    assert "cannon25d" in applicable_strategies(8)  # 8 = 2^2 * 2
