@@ -247,6 +247,33 @@ def bench_strategy_choice() -> List[Row]:
     return rows
 
 
+def bench_plan_dispatch() -> List[Row]:
+    """Plan-engine dispatch overhead + cache behaviour: repeated
+    ``symmetric_matmul`` calls must hit the plan cache (a miss storm here
+    is a dispatch regression -- this bench raises so the CI smoke job
+    fails loudly)."""
+    import jax
+    import jax.numpy as jnp
+    from repro import plan as planlib
+    from repro.dist.api import symmetric_matmul
+
+    planlib.cache_clear()
+    a = jax.random.normal(jax.random.PRNGKey(0), (192, 160), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (160, 128), jnp.float32)
+    us = _timeit(lambda: jax.block_until_ready(symmetric_matmul(a, b)))
+    s = planlib.cache_stats()
+    if s["hits"] < 3:  # warmup + 3 timed reps -> >= 3 hits after 1 miss
+        raise RuntimeError(f"plan cache not hitting on repeat calls: {s}")
+    # batched dispatch reuses the same plan entry family
+    xb = jax.random.normal(jax.random.PRNGKey(2), (4, 48, 160), jnp.float32)
+    out = symmetric_matmul(xb, b)
+    assert out.shape == (4, 48, 128)
+    return [(
+        "plan_dispatch_local", us,
+        f"hits={s['hits']};misses={s['misses']};entries={s['size']}",
+    )]
+
+
 # -- subprocess probe ----------------------------------------------------------
 
 _PROBE = r"""
@@ -330,4 +357,15 @@ ALL_BENCHES = (
     bench_matmul_kernel,
     bench_flash_kernel,
     bench_strategy_choice,
+    bench_plan_dispatch,
+)
+
+# tiny-shape subset for CI (`benchmarks/run.py --smoke`): no subprocess
+# device farms, no big compiles; surfaces plan-cache and dispatch
+# regressions before merge
+SMOKE_BENCHES = (
+    bench_lowerbound,
+    bench_spacebounded,
+    bench_strategy_choice,
+    bench_plan_dispatch,
 )

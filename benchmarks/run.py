@@ -2,6 +2,10 @@
 
 Prints ``name,us_per_call,derived`` CSV (stdout) and mirrors rows into
 bench_results.json for the experiment index.
+
+``--smoke`` runs the tiny-shape subset (no subprocess device farms) and
+exits nonzero on any bench error -- the CI job that catches plan-cache
+and dispatch regressions before merge.
 """
 from __future__ import annotations
 
@@ -18,12 +22,16 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
-def main() -> None:
-    from benchmarks.paper_benches import ALL_BENCHES
+def main(argv=None) -> int:
+    from benchmarks.paper_benches import ALL_BENCHES, SMOKE_BENCHES
 
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    benches = SMOKE_BENCHES if smoke else ALL_BENCHES
     rows = []
+    errors = 0
     print("name,us_per_call,derived")
-    for bench in ALL_BENCHES:
+    for bench in benches:
         try:
             for name, us, derived in bench():
                 print(f"{name},{us:.1f},{derived}", flush=True)
@@ -32,9 +40,12 @@ def main() -> None:
             print(f"{bench.__name__},NaN,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
             rows.append({"name": bench.__name__, "error": str(e)})
-    with open("bench_results.json", "w") as f:
+            errors += 1
+    out = "bench_results_smoke.json" if smoke else "bench_results.json"
+    with open(out, "w") as f:
         json.dump(rows, f, indent=1)
+    return 1 if (smoke and errors) else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

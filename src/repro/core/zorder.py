@@ -44,13 +44,22 @@ def morton_encode3(i: int, j: int, k: int) -> int:
     return out
 
 
+def enclosing_pow2(n: int) -> int:
+    """Smallest power of two >= n (the enclosing-cube side for a grid dim).
+
+    Exact for n < 2**47 (float log2 rounding is the limit); block-grid
+    dims sit orders of magnitude below that -- a side**3 enumeration is
+    infeasible long before -- and ``zorder_schedule`` asserts full grid
+    coverage after filtering.
+    """
+    return 1 if n <= 1 else 2 ** math.ceil(math.log2(n))
+
+
 def zorder_schedule(gi: int, gj: int, gk: int) -> List[Tuple[int, int, int]]:
     """Z-order traversal of a (gi, gj, gk) block grid (grid dims need not be
     powers of two: we enumerate the enclosing power-of-two cube and filter --
     order preserved, cost identical on the valid region)."""
-    side = 1 << max(gi - 1, gj - 1, gk - 1, 0).bit_length() if max(gi, gj, gk) > 1 else 1
-    while side < max(gi, gj, gk):
-        side <<= 1
+    side = enclosing_pow2(max(gi, gj, gk))
     out = []
     for code in range(side ** 3):
         i, j, k = morton_decode3(code)

@@ -15,6 +15,11 @@ programs:
   api       -- analytic cost model (estimate), strategy selection (choose),
                and dispatch (symmetric_matmul)
 
+Since the ``repro.plan`` refactor the strategy modules hold the lowering
+*rules* (shard_map bodies); program composition -- padding, specs,
+batch folding, plan caching -- lives in ``repro.plan.lower_shard_map``
+and the entry points here are thin facades over it.
+
 Local block multiplies route through the Pallas matmul kernel on TPU/GPU
 and jnp.matmul with fp32 accumulation elsewhere (repro.dist.local).
 """
@@ -22,10 +27,11 @@ from repro import jax_compat as _jax_compat
 
 _jax_compat.install()
 
+from ._util import pad_to  # noqa: E402
 from .api import (Estimate, applicable_strategies, choose, estimate,  # noqa: E402
                   symmetric_matmul)
 from .cannon import (cannon_matmul, executed_shift_vectors,  # noqa: E402
-                     lowered_plan, torus_schedule_matmul)
+                     lowered_plan, torus_body, torus_schedule_matmul)
 from .local import local_matmul  # noqa: E402
 from .pod25d import cannon25d_matmul, pod25d_matmul  # noqa: E402
 from .ring import ring_ag_matmul, ring_rs_matmul  # noqa: E402
@@ -34,7 +40,7 @@ from .summa import summa_matmul  # noqa: E402
 __all__ = [
     "Estimate", "applicable_strategies", "choose", "estimate",
     "symmetric_matmul", "cannon_matmul", "executed_shift_vectors",
-    "lowered_plan", "torus_schedule_matmul", "local_matmul",
-    "cannon25d_matmul", "pod25d_matmul", "ring_ag_matmul", "ring_rs_matmul",
-    "summa_matmul",
+    "lowered_plan", "torus_body", "torus_schedule_matmul", "local_matmul",
+    "cannon25d_matmul", "pod25d_matmul", "pad_to", "ring_ag_matmul",
+    "ring_rs_matmul", "summa_matmul",
 ]

@@ -1,0 +1,20 @@
+"""Shared helpers for the dist lowering rules."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_to(x: jax.Array, mults: Tuple[int, ...]) -> jax.Array:
+    """Zero-pad each dim of ``x`` up to the next multiple of ``mults``.
+
+    Every strategy pads its operands onto the device grid this way and
+    slices the product back; zero rows/columns contribute nothing to the
+    matmul so the result is exact.
+    """
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(hi for _, hi in pads):
+        return jnp.pad(x, pads)
+    return x

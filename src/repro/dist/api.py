@@ -1,4 +1,4 @@
-"""Strategy cost model + auto-dispatch for the dist matmul engines.
+"""Strategy cost model + the public dispatch facade over ``repro.plan``.
 
 ``estimate`` prices a strategy with the paper's word-counting applied to the
 TPU constants in ``repro.core.cost`` (ICI link bandwidth, peak MXU flops):
@@ -8,8 +8,9 @@ strategies (the ring/ppermute family) pay max(compute, comm) instead of the
 sum -- that inequality is exactly why the one-hop solutions win.
 
 ``choose`` ranks the strategies applicable to a device count / mesh
-topology and returns the cheapest; ``symmetric_matmul`` dispatches a global
-matmul through it.
+topology with the cost model (topology acts only as a *filter*) and returns
+the cheapest; ``symmetric_matmul`` dispatches a global matmul through the
+plan engine: ``repro.plan.build_plan`` (cached) + ``execute_plan``.
 """
 from __future__ import annotations
 
@@ -18,16 +19,8 @@ import math
 from typing import Optional
 
 import jax
-from jax.sharding import PartitionSpec as P
 
 from repro.core import cost as _cost
-from repro.jax_compat import shard_map
-
-from .cannon import cannon_matmul
-from .local import local_matmul
-from .pod25d import cannon25d_matmul, pod25d_matmul
-from .ring import ring_ag_matmul, ring_rs_matmul
-from .summa import summa_matmul
 
 STRATEGIES = (
     "cannon", "summa", "cannon25d", "pod25d",
@@ -75,10 +68,17 @@ def _pod_factor(tp: int) -> Optional[tuple]:
 
 
 def estimate(strategy: str, m: int, n: int, k: int, tp: int,
-             dtype_bytes: int = 2) -> Estimate:
+             dtype_bytes: int = 2, *, grid=None) -> Estimate:
     """Analytic cost of ``strategy`` for an (m, k) x (k, n) matmul on ``tp``
     devices.  ``total_s`` = max(compute, comm) for overlapped strategies,
-    sum otherwise."""
+    sum otherwise.
+
+    ``grid`` optionally pins the device-grid factorization the lowering
+    will actually run -- ``(qx, qy)`` for the 2-D torus strategies,
+    ``(c, qx, qy)`` (or ``(c,)``) for the 2.5D family -- so mesh-aware
+    rankings (``repro.plan.rank_mesh_strategies``) price the real program
+    rather than the canonical factorization of ``tp`` derived here.
+    """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
     compute_s = 2.0 * m * n * k / tp / _cost.PEAK_FLOPS_BF16
@@ -92,14 +92,27 @@ def estimate(strategy: str, m: int, n: int, k: int, tp: int,
         # reduce-scatter the (m, n) partial output
         comm_bytes = dtype_bytes * m * n * (tp - 1) / tp
     elif strategy in ("cannon", "summa"):
-        q = _square_side(tp) or max(int(math.isqrt(tp)), 2)
-        # per device: (q-1) block panels of A and of B
-        comm_bytes = dtype_bytes * (q - 1) * ((m / q) * (k / q) + (k / q) * (n / q))
+        if grid is not None:
+            qx, qy = grid[0], grid[1]
+        else:
+            qx = qy = _square_side(tp) or max(int(math.isqrt(tp)), 2)
+        # per device: the (m/qx, k) row panel from qy-1 peers and the
+        # (k, n/qy) column panel from qx-1 peers (equal to the classic
+        # (q-1) * 2 block panels when qx == qy)
+        comm_bytes = dtype_bytes * ((qy - 1) * (m / qx) * (k / qy)
+                                    + (qx - 1) * (k / qx) * (n / qy))
     elif strategy in ("pod25d", "cannon25d"):
-        qc = _pod_factor(tp) or (_square_side(tp) or 2, 1)
-        q, c = qc
-        shift = (q - 1) * ((m / q) * (k / (c * q)) + (k / (c * q)) * (n / q))
-        reduce_c = (c - 1) / c * (m / q) * (n / q) * 2  # replicate + reduce C
+        if grid is not None:
+            c = grid[0]
+            qx = grid[1] if len(grid) > 1 else 1
+            qy = grid[2] if len(grid) > 2 else qx
+        else:
+            q, c = _pod_factor(tp) or (_square_side(tp) or 2, 1)
+            qx = qy = q
+        # in-layer panel exchange on the (qx, qy) layer over the k/c slab
+        shift = ((qy - 1) * (m / qx) * (k / (c * qy))
+                 + (qx - 1) * (k / (c * qx)) * (n / qy))
+        reduce_c = (c - 1) / c * (m / qx) * (n / qy) * 2  # replicate + reduce C
         comm_bytes = dtype_bytes * (shift + reduce_c)
     else:  # pragma: no cover
         raise AssertionError(strategy)
@@ -120,25 +133,41 @@ def applicable_strategies(tp: int) -> tuple:
     return tuple(out)
 
 
+def _mesh_heuristic(mesh, m: int = 1, n: int = 1, k: int = 1) -> str:
+    """The pre-plan topology-shape heuristic, kept for reference and as a
+    regression foil: beyond the 1-D ring tie-break it ignores the problem
+    shape entirely, so it disagrees with the cost model e.g. on a square
+    mesh with a huge contraction dimension (Cannon moves O(k) panel bytes;
+    reduce-scattering the small output is cheaper).  tests/test_plan.py
+    pins one such disagreement."""
+    tp = mesh.size
+    axes = len(mesh.axis_names)
+    if tp == 1:
+        return "local"
+    if axes == 1:
+        # 1-D torus: move whichever tensor is smaller around the ring
+        return "ring_ag" if m * k <= m * n else "ring_rs"
+    if axes == 2:
+        sizes = [mesh.shape[nm] for nm in mesh.axis_names]
+        return "cannon" if sizes[0] == sizes[1] else "summa"
+    names = mesh.axis_names
+    if mesh.shape[names[1]] == mesh.shape[names[2]]:
+        return "cannon25d"
+    return "pod25d"  # rectangular in-layer axes: SUMMA in-layer
+
+
 def choose(m: int, n: int, k: int, *, tp: Optional[int] = None, mesh=None,
            dtype_bytes: int = 2) -> str:
-    """Pick the cheapest applicable strategy for the problem shape and mesh
-    topology (or bare device count ``tp``)."""
+    """Pick the cheapest applicable strategy for the problem shape and the
+    mesh topology (or bare device count ``tp``).  Topology only *filters*
+    the candidates (``repro.plan.mesh_candidates``); the analytic cost
+    model ranks them."""
     if mesh is not None:
-        tp = mesh.size
-        axes = len(mesh.axis_names)
-        if tp == 1:
+        if mesh.size == 1:
             return "local"
-        if axes == 1:
-            # 1-D torus: move whichever tensor is smaller around the ring
-            return "ring_ag" if m * k <= m * n else "ring_rs"
-        if axes == 2:
-            sizes = [mesh.shape[nm] for nm in mesh.axis_names]
-            return "cannon" if sizes[0] == sizes[1] else "summa"
-        names = mesh.axis_names
-        if mesh.shape[names[1]] == mesh.shape[names[2]]:
-            return "cannon25d"
-        return "pod25d"  # rectangular in-layer axes: SUMMA in-layer
+        from repro.plan import rank_mesh_strategies
+
+        return rank_mesh_strategies(m, n, k, mesh, dtype_bytes)[0].strategy
     if tp is None:
         raise ValueError("choose() needs tp= or mesh=")
     cands = applicable_strategies(tp)
@@ -149,55 +178,15 @@ def choose(m: int, n: int, k: int, *, tp: Optional[int] = None, mesh=None,
 def symmetric_matmul(a: jax.Array, b: jax.Array, *, mesh=None,
                      strategy: Optional[str] = None,
                      out_dtype=None) -> jax.Array:
-    """Global (M, K) x (K, N) matmul dispatched through the strategy picked
-    from mesh topology and problem shape (or forced via ``strategy``)."""
-    m, k = a.shape
-    n = b.shape[-1]
-    if mesh is None or mesh.size == 1:
-        return local_matmul(a, b, out_dtype=out_dtype)
-    if strategy is None:
-        strategy = choose(m, n, k, mesh=mesh)
-    if strategy in ("cannon", "summa"):
-        names = list(mesh.axis_names)
-        fn = cannon_matmul if strategy == "cannon" else summa_matmul
-        return fn(a, b, mesh=mesh, axis_x=names[0], axis_y=names[1],
-                  out_dtype=out_dtype)
-    if strategy in ("pod25d", "cannon25d"):
-        names = list(mesh.axis_names)
-        if strategy == "cannon25d":
-            return cannon25d_matmul(a, b, mesh=mesh, pod_axis=names[0],
-                                    axis_x=names[1], axis_y=names[2],
-                                    out_dtype=out_dtype)
-        return pod25d_matmul(a, b, mesh=mesh, pod_axis=names[0],
-                             out_dtype=out_dtype)
-    if strategy in ("ring_ag", "ring_rs"):
-        from .cannon import _pad_to
+    """Global (batch..., M, K) x (K, N) matmul dispatched through the plan
+    engine: strategy picked by the cost model over the mesh-applicable
+    candidates (or forced via ``strategy``), plan memoized in the plan
+    cache, leading batch dims folded before planning."""
+    from repro.plan import build_plan, execute_plan
 
-        axis = mesh.axis_names[0]
-        t = mesh.shape[axis]
-        if strategy == "ring_ag":
-            # sharded dims: m (rows of a) and n (cols of b); zero-pad + slice
-            ap, bp = _pad_to(a, (t, 1)), _pad_to(b, (1, t))
-            f = shard_map(
-                lambda xl, wl: ring_ag_matmul(xl, wl, axis,
-                                              out_dtype=out_dtype),
-                mesh=mesh,
-                in_specs=(P(axis, None), P(None, axis)),
-                out_specs=P(None, axis),
-            )
-            out = f(ap, bp)
-        else:
-            # sharded dims: the contraction k and the output rows m
-            ap, bp = _pad_to(a, (t, t)), _pad_to(b, (t, 1))
-            f = shard_map(
-                lambda yl, wl: ring_rs_matmul(yl, wl, axis,
-                                              out_dtype=out_dtype),
-                mesh=mesh,
-                in_specs=(P(None, axis), P(axis, None)),
-                out_specs=P(axis, None),
-            )
-            out = f(ap, bp)
-        return out[:m, :n] if out.shape != (m, n) else out
-    if strategy == "local":
-        return local_matmul(a, b, out_dtype=out_dtype)
-    raise ValueError(f"cannot dispatch strategy {strategy!r}")
+    plan = build_plan(
+        a.shape[-2], b.shape[-1], a.shape[-1], mesh=mesh, strategy=strategy,
+        batch=tuple(a.shape[:-2]),
+        a_dtype=a.dtype, b_dtype=b.dtype, out_dtype=out_dtype,
+    )
+    return execute_plan(plan, a, b)

@@ -1,8 +1,8 @@
-"""Execute equivariant torus schedules as shard_map/ppermute programs.
+"""Torus-schedule lowering rules: equivariant schedules as ppermute bodies.
 
 This is the algebra->execution bridge: a valid ``TorusSchedule`` (a solution
 of the paper's commutative-diagram equations, e.g. out of
-``repro.core.solver``) is lowered to a data-parallel program whose every
+``repro.core.solver``) lowers to a data-parallel program whose every
 data movement is a ``ppermute`` whose permutation comes verbatim from the
 schedule:
 
@@ -13,8 +13,10 @@ schedule:
   * the output is collected by ``schedule.collection_perm("C", t-1)``
     (identity for stationary-C schedules like Cannon, and then skipped).
 
-``cannon_matmul`` is the engine applied to ``cannon_schedule(q)``; any other
-valid solver solution executes through ``torus_schedule_matmul`` unchanged.
+``torus_body`` is the lowering *rule*: the shard_map body consumed by
+``repro.plan.lower_shard_map`` (and by the in-layer phase of the 2.5D
+rule in ``repro.dist.pod25d``).  The entry points ``cannon_matmul`` /
+``torus_schedule_matmul`` are thin facades over ``repro.plan``.
 """
 from __future__ import annotations
 
@@ -23,18 +25,23 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
 
 from repro.core.schedule import TorusSchedule, cannon_schedule
-from repro.jax_compat import shard_map
 
+from ._util import pad_to
 from .local import local_matmul
+
+# retained import location: callers historically did
+# ``from repro.dist.cannon import _pad_to`` -- the shared helper now lives
+# in repro.dist._util
+_pad_to = pad_to
 
 
 def lowered_plan(schedule: TorusSchedule) -> Dict:
     """The complete ppermute program for ``schedule``: per-step shift
     vectors, one-step movement perms, initial-skew perms, and the final
-    C-collection perm.  Everything the executor runs comes from here."""
+    C-collection perm.  Everything the executor runs comes from here (and
+    ``repro.plan.ir.TorusProgram`` reifies it as static IR)."""
     moves = schedule.movements()
     if moves is None:
         raise ValueError("schedule has no consistent movement homomorphisms")
@@ -62,36 +69,44 @@ def _is_identity(perm) -> bool:
 def _permute(x, axes, perm):
     if _is_identity(perm):
         return x
-    return lax.ppermute(x, axes, perm)
+    return lax.ppermute(x, axes, list(perm))
 
 
-def _pad_to(x: jax.Array, mults: Tuple[int, ...]) -> jax.Array:
-    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
-    if any(hi for _, hi in pads):
-        return jnp.pad(x, pads)
-    return x
-
-
-def torus_body(schedule: TorusSchedule, axis_x: str, axis_y: str):
-    """shard_map body executing ``schedule`` on local (M/q, K/q) x (K/q, N/q)
-    blocks; returns the fp32 accumulator in canonical C layout.  Shared by
-    cannon_matmul and the in-layer phase of cannon25d_matmul."""
-    plan = lowered_plan(schedule)
+def torus_program_body(prog, axis_x: str, axis_y: str, local_fn=None):
+    """shard_map body executing a reified torus program on local
+    (M/q, K/q) x (K/q, N/q) blocks; returns the fp32 accumulator in
+    canonical C layout.  ``prog`` is anything carrying the program fields
+    (``repro.plan.ir.TorusProgram``, or the view ``torus_body`` builds from
+    a schedule): steps, skew_a/b, step_a/b/c, collect_c.  The local block
+    multiply is ``local_fn`` (default ``local_matmul``; the plan compiler
+    passes its Pallas tiling lowering here)."""
     axes = (axis_x, axis_y)
+    local_fn = local_fn or local_matmul
 
     def body(ab, bb):
-        ab = _permute(ab, axes, plan["skew"]["A"])
-        bb = _permute(bb, axes, plan["skew"]["B"])
+        ab = _permute(ab, axes, prog.skew_a)
+        bb = _permute(bb, axes, prog.skew_b)
         acc = jnp.zeros((ab.shape[0], bb.shape[1]), jnp.float32)
-        for step in range(plan["steps"]):
-            acc = acc + local_matmul(ab, bb, out_dtype=jnp.float32)
-            if step < plan["steps"] - 1:
-                ab = _permute(ab, axes, plan["step_perm"]["A"])
-                bb = _permute(bb, axes, plan["step_perm"]["B"])
-                acc = _permute(acc, axes, plan["step_perm"]["C"])
-        return _permute(acc, axes, plan["collect_C"])
+        for step in range(prog.steps):
+            acc = acc + local_fn(ab, bb, out_dtype=jnp.float32)
+            if step < prog.steps - 1:
+                ab = _permute(ab, axes, prog.step_a)
+                bb = _permute(bb, axes, prog.step_b)
+                acc = _permute(acc, axes, prog.step_c)
+        return _permute(acc, axes, prog.collect_c)
 
     return body
+
+
+def torus_body(schedule: TorusSchedule, axis_x: str, axis_y: str,
+               local_fn=None):
+    """``torus_program_body`` over the program reified from ``schedule``
+    (the same ``TorusProgram`` the plan IR carries -- one field mapping,
+    shared by the schedule-direct and plan paths)."""
+    from repro.plan.ir import TorusProgram
+
+    return torus_program_body(TorusProgram.from_schedule(schedule),
+                              axis_x, axis_y, local_fn=local_fn)
 
 
 def torus_schedule_matmul(a: jax.Array, b: jax.Array,
@@ -99,35 +114,18 @@ def torus_schedule_matmul(a: jax.Array, b: jax.Array,
                           axis_x: str = "x", axis_y: str = "y",
                           out_dtype=None) -> jax.Array:
     """Global (M, K) x (K, N) matmul executing ``schedule`` on the q x q
-    torus spanned by mesh axes (axis_x, axis_y).  Operands are zero-padded
-    to block multiples and the result sliced back."""
-    q = schedule.q
-    if mesh.shape[axis_x] != q or mesh.shape[axis_y] != q:
-        raise ValueError(
-            f"mesh axes ({mesh.shape[axis_x]}, {mesh.shape[axis_y]}) "
-            f"do not span the schedule's {q} x {q} torus")
-    if schedule.t != q:
-        raise ValueError("executor supports the t = q schedule family")
-    if out_dtype is None:
-        out_dtype = jnp.result_type(a.dtype, b.dtype)
-    m, k = a.shape
-    k2, n = b.shape
-    if k != k2:
-        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
-    ap = _pad_to(a, (q, q))
-    bp = _pad_to(b, (q, q))
+    torus spanned by mesh axes (axis_x, axis_y).  Facade over the plan
+    engine: builds a torus plan carrying the schedule and executes its
+    shard_map lowering (operands zero-padded to block multiples, result
+    sliced back)."""
+    from repro.plan import build_plan, execute_plan
 
-    body = torus_body(schedule, axis_x, axis_y)
-    f = shard_map(
-        lambda ab, bb: body(ab, bb).astype(out_dtype),
-        mesh=mesh,
-        in_specs=(P(axis_x, axis_y), P(axis_x, axis_y)),
-        out_specs=P(axis_x, axis_y),
+    plan = build_plan(
+        a.shape[-2], b.shape[-1], a.shape[-1], mesh=mesh, schedule=schedule,
+        axes=(axis_x, axis_y), batch=tuple(a.shape[:-2]),
+        a_dtype=a.dtype, b_dtype=b.dtype, out_dtype=out_dtype,
     )
-    out = f(ap, bp)
-    if out.shape != (m, n):
-        out = out[:m, :n]
-    return out
+    return execute_plan(plan, a, b)
 
 
 def cannon_matmul(a: jax.Array, b: jax.Array, *, mesh,

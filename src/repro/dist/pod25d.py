@@ -1,20 +1,23 @@
-"""2.5D strategies: replicate--compute--reduce over a pod axis (Sec. D.1).
+"""2.5D lowering rules: replicate--compute--reduce over a pod axis (Sec. D.1).
 
 ``Torus25DSchedule`` splits the contraction index j = j_c * (q/c) + j_t: the
 c-part selects a pod layer (each layer owns a contraction slab), the t-part
 runs an in-layer 2-D schedule, and C is reduced over the pod axis at the
 end.  Here the pod split composes with either in-layer strategy:
 
-  pod25d_matmul    -- slab matmul per layer (SUMMA in-layer when the mesh
-                      also has 2-D axes), then psum over the pod axis
-  cannon25d_matmul -- in-layer Cannon on the slab (the executed
-                      ``cannon_schedule(q)`` ppermute program of
-                      repro.dist.cannon), then psum over the pod axis
+  pod25d    -- slab matmul per layer (SUMMA in-layer when the mesh also
+               has 2-D axes), then psum over the pod axis
+  cannon25d -- in-layer Cannon on the slab (the executed
+               ``cannon_schedule(q)`` ppermute program of
+               repro.dist.cannon), then psum over the pod axis
 
 The replication half of the trade (each layer holding a full copy of its
-operand panels) is expressed by the in_specs: operands are sharded over
-(pod x in-layer) axes jointly, so each layer starts with exactly its slab
-and no cross-layer broadcast is needed beyond XLA's initial layout.
+operand panels) is expressed by the in_specs the plan compiler emits:
+operands are sharded over (pod x in-layer) axes jointly, so each layer
+starts with exactly its slab and no cross-layer broadcast is needed beyond
+XLA's initial layout.  The ``*_body`` functions are the lowering rules
+consumed by ``repro.plan.lower_shard_map``; the ``*_matmul`` entry points
+are facades over the plan engine.
 """
 from __future__ import annotations
 
@@ -23,12 +26,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
 
-from repro.core.schedule import cannon_schedule
-from repro.jax_compat import shard_map
-
-from .cannon import _pad_to, torus_body
+from .cannon import torus_program_body
 from .local import local_matmul
 
 
@@ -42,6 +41,48 @@ def _inlayer_axes(mesh, pod_axis: str, axis_x: Optional[str],
     return None, None
 
 
+def pod25d_slab_body(pod_axis: str, out_dtype, local_fn=None):
+    """Lowering rule, no in-layer axes: each layer multiplies its full
+    contraction slab locally, then C reduces over the pod axis."""
+    local_fn = local_fn or local_matmul
+
+    def body(ab, bb):
+        part = local_fn(ab, bb, out_dtype=jnp.float32)
+        return lax.psum(part, pod_axis).astype(out_dtype)
+
+    return body
+
+
+def pod25d_summa_body(pod_axis: str, axis_x: str, axis_y: str, out_dtype,
+                      local_fn=None):
+    """Lowering rule, SUMMA in-layer: within layer z the A-columns / B-rows
+    cover contraction slab z; gather panels, multiply, reduce over pod."""
+    local_fn = local_fn or local_matmul
+
+    def body(ab, bb):
+        arow = lax.all_gather(ab, axis_y, axis=1, tiled=True)  # (M/qx, K/c)
+        bcol = lax.all_gather(bb, axis_x, axis=0, tiled=True)  # (K/c, N/qy)
+        part = local_fn(arow, bcol, out_dtype=jnp.float32)
+        return lax.psum(part, pod_axis).astype(out_dtype)
+
+    return body
+
+
+def cannon25d_body(pod_axis: str, axis_x: str, axis_y: str, prog,
+                   out_dtype, local_fn=None):
+    """Lowering rule, Cannon in-layer: each pod layer executes the reified
+    torus program ``prog`` (the solver's ``cannon_schedule(q)`` ppermute
+    program) on its contraction slab, and C partial sums reduce over the
+    pod axis."""
+    inner = torus_program_body(prog, axis_x, axis_y, local_fn=local_fn)
+
+    def body(ab, bb):
+        acc = inner(ab, bb)
+        return lax.psum(acc, pod_axis).astype(out_dtype)
+
+    return body
+
+
 def pod25d_matmul(a: jax.Array, b: jax.Array, *, mesh,
                   pod_axis: str = "pod",
                   axis_x: Optional[str] = None, axis_y: Optional[str] = None,
@@ -49,49 +90,16 @@ def pod25d_matmul(a: jax.Array, b: jax.Array, *, mesh,
     """Global matmul with the contraction split over ``pod_axis``.  When the
     mesh carries two more axes the in-layer phase is SUMMA over them;
     otherwise each layer multiplies its full slab locally."""
-    c = mesh.shape[pod_axis]
-    if out_dtype is None:
-        out_dtype = jnp.result_type(a.dtype, b.dtype)
-    m, k = a.shape
-    k2, n = b.shape
-    if k != k2:
-        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+    from repro.plan import build_plan, execute_plan
+
     ax, ay = _inlayer_axes(mesh, pod_axis, axis_x, axis_y)
-
-    if ax is None:
-        ap = _pad_to(a, (1, c))
-        bp = _pad_to(b, (c, 1))
-
-        def body(ab, bb):
-            part = local_matmul(ab, bb, out_dtype=jnp.float32)
-            return lax.psum(part, pod_axis).astype(out_dtype)
-
-        f = shard_map(
-            body, mesh=mesh,
-            in_specs=(P(None, pod_axis), P(pod_axis, None)),
-            out_specs=P(None, None),
-        )
-        out = f(ap, bp)
-        return out[:m, :n] if out.shape != (m, n) else out
-
-    qx, qy = mesh.shape[ax], mesh.shape[ay]
-    ap = _pad_to(a, (qx, c * qx * qy))
-    bp = _pad_to(b, (c * qx * qy, qy))
-
-    def body(ab, bb):
-        # within layer z: A cols / B rows cover contraction slab z
-        arow = lax.all_gather(ab, ay, axis=1, tiled=True)  # (M/qx, K/c)
-        bcol = lax.all_gather(bb, ax, axis=0, tiled=True)  # (K/c, N/qy)
-        part = local_matmul(arow, bcol, out_dtype=jnp.float32)
-        return lax.psum(part, pod_axis).astype(out_dtype)
-
-    f = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(ax, (pod_axis, ay)), P((pod_axis, ax), ay)),
-        out_specs=P(ax, ay),
+    axes = (pod_axis,) if ax is None else (pod_axis, ax, ay)
+    plan = build_plan(
+        a.shape[-2], b.shape[-1], a.shape[-1], mesh=mesh, strategy="pod25d",
+        axes=axes, batch=tuple(a.shape[:-2]),
+        a_dtype=a.dtype, b_dtype=b.dtype, out_dtype=out_dtype,
     )
-    out = f(ap, bp)
-    return out[:m, :n] if out.shape != (m, n) else out
+    return execute_plan(plan, a, b)
 
 
 def cannon25d_matmul(a: jax.Array, b: jax.Array, *, mesh,
@@ -101,29 +109,11 @@ def cannon25d_matmul(a: jax.Array, b: jax.Array, *, mesh,
     """2.5D with in-layer Cannon: each pod layer executes the solver's
     ``cannon_schedule(q)`` ppermute program on its contraction slab, and C
     partial sums reduce over the pod axis."""
-    c = mesh.shape[pod_axis]
-    q = mesh.shape[axis_x]
-    if mesh.shape[axis_y] != q:
-        raise ValueError("in-layer Cannon needs a square (q x q) layer")
-    if out_dtype is None:
-        out_dtype = jnp.result_type(a.dtype, b.dtype)
-    m, k = a.shape
-    k2, n = b.shape
-    if k != k2:
-        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
-    ap = _pad_to(a, (q, c * q))
-    bp = _pad_to(b, (c * q, q))
+    from repro.plan import build_plan, execute_plan
 
-    inner = torus_body(cannon_schedule(q), axis_x, axis_y)
-
-    def body(ab, bb):
-        acc = inner(ab, bb)
-        return lax.psum(acc, pod_axis).astype(out_dtype)
-
-    f = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis_x, (pod_axis, axis_y)), P((pod_axis, axis_x), axis_y)),
-        out_specs=P(axis_x, axis_y),
+    plan = build_plan(
+        a.shape[-2], b.shape[-1], a.shape[-1], mesh=mesh, strategy="cannon25d",
+        axes=(pod_axis, axis_x, axis_y), batch=tuple(a.shape[:-2]),
+        a_dtype=a.dtype, b_dtype=b.dtype, out_dtype=out_dtype,
     )
-    out = f(ap, bp)
-    return out[:m, :n] if out.shape != (m, n) else out
+    return execute_plan(plan, a, b)

@@ -34,14 +34,16 @@ def _ring_perm(n: int):
     return [(d, (d + 1) % n) for d in range(n)]
 
 
-def ring_ag_matmul(x: jax.Array, w: jax.Array, axis: str, *,
-                   out_dtype=None) -> jax.Array:
-    """Fused all-gather(x) @ w_local over ring axis ``axis``.
+def ring_ag_matmul(x: jax.Array, w: jax.Array, axis, *,
+                   out_dtype=None, local_fn=None) -> jax.Array:
+    """Fused all-gather(x) @ w_local over ring axis ``axis`` (a mesh axis
+    name, or a tuple of names treated as one flattened ring).
 
     Each of the t steps multiplies the resident x-chunk against the local
     weight shard and writes the product into its global row slot, while the
     chunk ring-shifts one hop for the next step.
     """
+    local_fn = local_fn or local_matmul
     n = lax.psum(1, axis)
     idx = lax.axis_index(axis)
     if out_dtype is None:
@@ -54,7 +56,7 @@ def ring_ag_matmul(x: jax.Array, w: jax.Array, axis: str, *,
     for s in range(n):
         # issue the permute first so it overlaps the matmul below
         nxt = lax.ppermute(cur, axis, perm) if s < n - 1 else None
-        prod = local_matmul(cur, w, out_dtype=out_dtype)
+        prod = local_fn(cur, w, out_dtype=out_dtype)
         src = (idx - s) % n  # origin device of the resident chunk
         start = (0,) * (len(out_shape) - 2) + (src * chunk, 0)
         out = lax.dynamic_update_slice(out, prod, start)
@@ -62,18 +64,20 @@ def ring_ag_matmul(x: jax.Array, w: jax.Array, axis: str, *,
     return out
 
 
-def ring_rs_matmul(y: jax.Array, w: jax.Array, axis: str, *,
-                   out_dtype=None) -> jax.Array:
-    """Fused (y @ w_local) reduce-scatter over ring axis ``axis``.
+def ring_rs_matmul(y: jax.Array, w: jax.Array, axis, *,
+                   out_dtype=None, local_fn=None) -> jax.Array:
+    """Fused (y @ w_local) reduce-scatter over ring axis ``axis`` (a mesh
+    axis name or tuple of names flattened into one ring).
 
     The local partial product is full-height; the reduction walks the ring
     accumulating the row-chunk destined for each device, one hop per step.
     """
+    local_fn = local_fn or local_matmul
     n = lax.psum(1, axis)
     idx = lax.axis_index(axis)
     if out_dtype is None:
         out_dtype = jnp.result_type(y.dtype, w.dtype)
-    partial = local_matmul(y, w, out_dtype=jnp.float32)
+    partial = local_fn(y, w, out_dtype=jnp.float32)
     rows = partial.shape[-2]
     if rows % n:
         raise ValueError(f"rows {rows} not divisible by ring size {n}")

@@ -3,53 +3,47 @@ Cannon's permute chains.
 
 SUMMA's per-step row/column panel broadcasts, summed over the q steps, are
 exactly a tiled all-gather of A along the mesh columns and of B along the
-mesh rows -- which is how XLA lowers them on a torus -- so the engine emits
-the fused form: two all-gathers plus one local matmul.  Same asymptotic
-words as Cannon (each device receives (q-1)/q of a row + column panel) but
-as monolithic all-gathers, not overlappable one-hop permutes; the HLO
-difference is visible in examples/distributed_matmul.py.
+mesh rows -- which is how XLA lowers them on a torus -- so the lowering rule
+emits the fused form: two all-gathers plus one local matmul.  Same
+asymptotic words as Cannon (each device receives (q-1)/q of a row + column
+panel) but as monolithic all-gathers, not overlappable one-hop permutes;
+the HLO difference is visible in examples/distributed_matmul.py.
 
 Unlike Cannon, SUMMA tolerates rectangular meshes (axis_x != axis_y sizes).
+``summa_body`` is the lowering rule consumed by
+``repro.plan.lower_shard_map``; ``summa_matmul`` is a facade over the plan
+engine.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
 
-from repro.jax_compat import shard_map
-
-from .cannon import _pad_to
 from .local import local_matmul
+
+
+def summa_body(axis_x: str, axis_y: str, out_dtype, local_fn=None):
+    """shard_map body: tiled all-gathers of the A-row / B-column panels
+    followed by one local multiply (the fused SUMMA step sum)."""
+    local_fn = local_fn or local_matmul
+
+    def body(ab, bb):
+        arow = lax.all_gather(ab, axis_y, axis=1, tiled=True)  # (M/qx, K)
+        bcol = lax.all_gather(bb, axis_x, axis=0, tiled=True)  # (K, N/qy)
+        return local_fn(arow, bcol, out_dtype=out_dtype)
+
+    return body
 
 
 def summa_matmul(a: jax.Array, b: jax.Array, *, mesh,
                  axis_x: str = "x", axis_y: str = "y",
                  out_dtype=None) -> jax.Array:
     """Global (M, K) x (K, N) matmul, SUMMA-scheduled over (axis_x, axis_y)."""
-    qx, qy = mesh.shape[axis_x], mesh.shape[axis_y]
-    if out_dtype is None:
-        out_dtype = jnp.result_type(a.dtype, b.dtype)
-    m, k = a.shape
-    k2, n = b.shape
-    if k != k2:
-        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
-    # K is split by qy on A's columns and by qx on B's rows
-    ap = _pad_to(a, (qx, qx * qy))
-    bp = _pad_to(b, (qx * qy, qy))
+    from repro.plan import build_plan, execute_plan
 
-    def body(ab, bb):
-        arow = lax.all_gather(ab, axis_y, axis=1, tiled=True)  # (M/qx, K)
-        bcol = lax.all_gather(bb, axis_x, axis=0, tiled=True)  # (K, N/qy)
-        return local_matmul(arow, bcol, out_dtype=out_dtype)
-
-    f = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis_x, axis_y), P(axis_x, axis_y)),
-        out_specs=P(axis_x, axis_y),
+    plan = build_plan(
+        a.shape[-2], b.shape[-1], a.shape[-1], mesh=mesh, strategy="summa",
+        axes=(axis_x, axis_y), batch=tuple(a.shape[:-2]),
+        a_dtype=a.dtype, b_dtype=b.dtype, out_dtype=out_dtype,
     )
-    out = f(ap, bp)
-    if out.shape != (m, n):
-        out = out[:m, :n]
-    return out
+    return execute_plan(plan, a, b)

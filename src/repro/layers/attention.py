@@ -13,6 +13,11 @@ for SWA (h2o-danube at 500k), and the *compressed latent* cache for MLA with
 the absorbed-matmul decode (w_uk/w_uv folded into the query/output products
 -- a schedule re-association in the spirit of the paper: same instruction
 set X, different equivariant map).
+
+The qkv/output projections route through ``layers.linear``: inside a
+``repro.plan.planned_matmuls(mesh)`` scope they dispatch through the plan
+engine (mesh-aware schedule, plan cache) instead of the purely local
+multiply.
 """
 from __future__ import annotations
 

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.local import local_matmul
+from repro.plan.context import planned_mesh
 
 
 def linear_params(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
@@ -13,10 +14,22 @@ def linear_params(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
 
 
 def linear(x: jax.Array, w: jax.Array) -> jax.Array:
-    """x @ w with fp32 accumulation.  The GSPMD baseline path: sharding of w
-    (and hence the collective schedule) comes from the param PartitionSpecs;
-    ring strategies replace this call inside shard_map blocks (see
-    repro.dist.api.symmetric_matmul).  The local multiply routes through
-    repro.dist.local (Pallas kernel on TPU/GPU, fp32-accumulating jnp
-    elsewhere)."""
+    """x @ w with fp32 accumulation.
+
+    Two paths:
+      * default -- the GSPMD baseline: a local multiply (Pallas kernel on
+        TPU/GPU, fp32-accumulating jnp elsewhere); sharding of w (and hence
+        the collective schedule) comes from the param PartitionSpecs.
+      * inside ``repro.plan.planned_matmuls(mesh)`` -- the product dispatches
+        through the plan engine: cost-model-ranked strategy, cached
+        ``SchedulePlan``, leading (batch, seq) dims folded into the matmul
+        rows before planning.  This is how the whole layer stack (mlp,
+        attention, moe ride on this function) gets a mesh-aware schedule
+        without threading a mesh argument through every call.
+    """
+    mesh = planned_mesh()
+    if mesh is not None and getattr(mesh, "size", 1) > 1:
+        from repro.dist.api import symmetric_matmul
+
+        return symmetric_matmul(x, w, mesh=mesh, out_dtype=x.dtype)
     return local_matmul(x, w, out_dtype=x.dtype)

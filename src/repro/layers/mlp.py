@@ -1,4 +1,11 @@
-"""SwiGLU MLP (llama family standard)."""
+"""SwiGLU MLP (llama family standard).
+
+All three projections route through ``layers.linear``, so inside a
+``repro.plan.planned_matmuls(mesh)`` scope the gate/up/down matmuls each
+dispatch through the plan engine (cost-model-ranked strategy, cached
+plan, (B, S) folded into the matmul rows); outside it they are the local
+GSPMD-baseline multiplies.
+"""
 from __future__ import annotations
 
 from typing import Dict

@@ -16,7 +16,8 @@ from typing import Any, Dict, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.runtime.sharding import resolve_axis
+from repro.runtime.sharding import (MODEL_AXIS, planned_matmul_axes,
+                                    resolve_axis)
 
 # name -> (base_rank, base_spec over logical axes)
 _RULES: Dict[str, Tuple[int, Tuple]] = {
@@ -81,6 +82,29 @@ def param_specs(params: Any) -> Any:
     return jax.tree_util.tree_map_with_path(_spec_for, params)
 
 
+# weights below this size are cheaper replicated than collectived over
+_AUTO_MIN_DIM = 128
+
+
+def ranked_linear_spec(shape, mesh: Mesh, *, tokens: int = 8192) -> P:
+    """Estimate-ranked spec for a 2-D weight not covered by ``_RULES``:
+    prices column- vs row-parallel with the plan cost model (see
+    ``repro.runtime.sharding.planned_matmul_axes``) instead of assuming a
+    name convention.  Falls back to replicated for weights too small to be
+    worth a collective or not divisible by the model axis."""
+    if len(shape) != 2 or min(shape) < _AUTO_MIN_DIM:
+        return P()
+    model = mesh.shape.get(MODEL_AXIS, 1)
+    if model <= 1:
+        return P()
+    axes = planned_matmul_axes(shape[0], shape[1], mesh=mesh, tokens=tokens)
+    axes = tuple(
+        a if a is not None and shape[i] % model == 0 else None
+        for i, a in enumerate(axes)
+    )
+    return P(*axes)
+
+
 def _axis_size(mesh: Mesh, axis) -> int:
     if axis is None:
         return 1
@@ -92,13 +116,21 @@ def _axis_size(mesh: Mesh, axis) -> int:
     return mesh.shape.get(axis, 1)
 
 
-def param_shardings(params: Any, mesh: Mesh) -> Any:
+def param_shardings(params: Any, mesh: Mesh, *,
+                    auto_matmul: bool = False) -> Any:
     """Resolve logical specs against ``mesh``, dropping any sharded axis a
-    dimension cannot honour (e.g. tiny gate projections vs model=16)."""
+    dimension cannot honour (e.g. tiny gate projections vs model=16).
+
+    ``auto_matmul=True`` additionally consults the plan cost model for 2-D
+    weights the name table leaves replicated (``ranked_linear_spec``), so
+    new layer families get a Megatron-style split derived from word counts
+    rather than silently paying replication."""
 
     def resolve(leaf, spec: P) -> NamedSharding:
-        axes = [resolve_axis(a, mesh) for a in spec]
         shape = getattr(leaf, "shape", ())
+        if auto_matmul and tuple(spec) == () and len(shape) == 2:
+            spec = ranked_linear_spec(shape, mesh)
+        axes = [resolve_axis(a, mesh) for a in spec]
         for i, a in enumerate(axes):
             if a is None or i >= len(shape):
                 continue

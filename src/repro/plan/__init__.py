@@ -1,0 +1,64 @@
+"""repro.plan -- the unified schedule-plan IR.
+
+The paper's thesis is that one algebraic object -- an equivariant map fixed
+by a homomorphism of the iteration-space symmetry group -- describes a
+matmul schedule at every machine level.  ``SchedulePlan`` reifies that
+object as a compiler IR sitting between the solver (``repro.core``) and the
+two machine levels it lowers to:
+
+    solver (repro.core)  -->  SchedulePlan  -->  lower_shard_map  (inter-chip)
+                                          \\->  lower_pallas     (intra-chip)
+
+IR field -> paper object:
+
+  ``strategy``             the solution family of the equivariance
+                           equations being executed (Cannon, SUMMA's
+                           broadcast contrast class, the 1-D ring
+                           solutions, the 2.5D composition)
+  ``axes`` / ``grid``      the network group N = (Z/qZ)^d the schedule is
+                           equivariant under, named as mesh axes
+  ``torus.skew_a/b``       the initial placement l_I -- each block's device
+                           is a coset representative of its stabilizer
+  ``torus.step_*``         the movement homomorphism's image: the constant
+                           network translation mu each variable set
+                           performs per time step, as ppermute (src, dst)
+                           pairs
+  ``torus.collect_c``      l_I^{-1} after t steps -- the inverse coset map
+                           restoring canonical layout (empty when C is
+                           stationary, e.g. Cannon)
+  ``replication``          the Sec.-2.5 memory-for-communication trade:
+                           c-fold operand copies along the pod axis
+  ``tiling``               the iterated-wreath-product homomorphism of
+                           Sec. 4.3 -- low-order index bits lifted to small
+                           time steps, i.e. the Z-order (Morton) bits of
+                           the intra-device block traversal
+  ``cost``                 the word-count Estimate that ranked this
+                           strategy (the paper's communication-cost
+                           functional on schedules)
+
+``build_plan`` is the planner (topology filters, the cost model ranks);
+``execute_plan`` folds leading batch dims and runs the shard_map lowering;
+the plan cache memoizes all of it per (shapes, dtypes, mesh fingerprint,
+strategy override).  ``repro.dist.api.symmetric_matmul`` is a thin facade
+over this package, and ``planned_matmuls`` routes the layer library's
+x @ w products through it.
+"""
+from .cache import PlanCache, cache_clear, cache_stats, plan_cache
+from .context import planned_matmuls, planned_mesh
+from .ir import (SchedulePlan, TilingPlan, TorusProgram, build_plan,
+                 mesh_candidates, mesh_fingerprint, rank_mesh_strategies)
+from .lower_pallas import lower_pallas, lower_tiling
+from .lower_shard_map import execute_plan, lower_shard_map
+
+# the plan package's cost model is the dist analytic model; re-exported so
+# consumers (runtime.sharding, models.sharding_rules) can "consult
+# plan.estimate" without reaching into repro.dist
+from repro.dist.api import Estimate, estimate  # noqa: E402  (cycle-safe)
+
+__all__ = [
+    "SchedulePlan", "TilingPlan", "TorusProgram", "build_plan",
+    "mesh_candidates", "mesh_fingerprint", "rank_mesh_strategies",
+    "execute_plan", "lower_shard_map", "lower_pallas", "lower_tiling",
+    "PlanCache", "plan_cache", "cache_stats", "cache_clear",
+    "planned_matmuls", "planned_mesh", "Estimate", "estimate",
+]

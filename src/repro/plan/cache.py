@@ -1,0 +1,61 @@
+"""Plan cache: memoizes ``build_plan`` so repeated layer calls skip the
+cost-model ranking and schedule/permutation construction.
+
+Keys are ``(batch, shapes, dtypes, mesh fingerprint, strategy override,
+axes, schedule, tiling)`` -- everything that changes the emitted program.
+Stats are exposed for tests and the benchmark smoke job (a dispatch
+regression shows up as a miss storm).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional
+
+
+class PlanCache:
+    """A small thread-safe memo table with hit/miss counters."""
+
+    def __init__(self, max_entries: int = 1024):
+        self._store: Dict[Any, Any] = {}
+        self._lock = threading.Lock()
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key) -> Optional[Any]:
+        with self._lock:
+            plan = self._store.get(key)
+            if plan is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return plan
+
+    def put(self, key, plan) -> None:
+        with self._lock:
+            if len(self._store) >= self.max_entries:
+                # drop the oldest insertion (dict preserves order)
+                self._store.pop(next(iter(self._store)))
+            self._store[key] = plan
+
+    def clear(self) -> None:
+        with self._lock:
+            self._store.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "size": len(self._store)}
+
+
+plan_cache = PlanCache()
+
+
+def cache_stats() -> Dict[str, int]:
+    return plan_cache.stats()
+
+
+def cache_clear() -> None:
+    plan_cache.clear()

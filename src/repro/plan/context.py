@@ -1,0 +1,31 @@
+"""Opt-in mesh context routing layer matmuls through the plan engine.
+
+``repro.layers.linear`` (and everything built on it: mlp, attention, moe)
+checks ``planned_mesh()``: inside a ``planned_matmuls(mesh)`` scope its
+x @ w products dispatch through ``repro.plan`` -- cost-model-ranked
+strategy, plan cache, batch folding -- instead of the purely local
+multiply.  Outside the scope nothing changes (the GSPMD baseline path).
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional
+
+_PLAN_MESH: ContextVar[Optional[object]] = ContextVar(
+    "repro_plan_mesh", default=None)
+
+
+def planned_mesh():
+    """The mesh layer matmuls should plan against, or None (local path)."""
+    return _PLAN_MESH.get()
+
+
+@contextlib.contextmanager
+def planned_matmuls(mesh):
+    """Route layer matmuls through ``repro.plan`` on ``mesh`` within scope."""
+    token = _PLAN_MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _PLAN_MESH.reset(token)

@@ -1,0 +1,404 @@
+"""SchedulePlan: the reified schedule IR.
+
+``build_plan`` is the planner: it takes a global matmul (shapes, dtypes,
+batching) plus a mesh, picks a strategy (cost-model-ranked, topology only as
+a filter), and materializes everything the two lowerings need -- mesh-axis
+roles, the torus program's placement/movement/collection permutations,
+replication factor, padding multiples, and the intra-device tiling order.
+Plans are immutable and hashable; ``repro.plan.cache`` memoizes them on
+``(batch, shapes, dtypes, mesh fingerprint, strategy override)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.schedule import TorusSchedule, cannon_schedule
+from repro.dist.api import Estimate, estimate
+
+Perm = Tuple[Tuple[int, int], ...]
+
+
+def _freeze_perm(perm) -> Perm:
+    return tuple((int(s), int(d)) for s, d in perm) if perm is not None else ()
+
+
+@dataclasses.dataclass(frozen=True)
+class TorusProgram:
+    """The complete ppermute program of a ``TorusSchedule`` as static data.
+
+    Paper mapping: ``skew_*`` are the initial placements l_I (one coset
+    representative per block), ``step_*`` the one-step images of the movement
+    homomorphism mu, ``collect_c`` the inverse layout restore (empty when C is
+    stationary in canonical layout, e.g. Cannon).
+    """
+
+    q: int
+    steps: int
+    shifts: Tuple[Tuple[str, Tuple[int, int]], ...]  # {var: mu} as items
+    skew_a: Perm
+    skew_b: Perm
+    step_a: Perm
+    step_b: Perm
+    step_c: Perm
+    collect_c: Perm
+
+    @classmethod
+    def from_schedule(cls, schedule: TorusSchedule) -> "TorusProgram":
+        from repro.dist.cannon import lowered_plan
+
+        p = lowered_plan(schedule)
+        return cls(
+            q=p["q"],
+            steps=p["steps"],
+            shifts=tuple(sorted(
+                (v, (int(mu[0]), int(mu[1]))) for v, mu in p["shifts"].items()
+            )),
+            skew_a=_freeze_perm(p["skew"]["A"]),
+            skew_b=_freeze_perm(p["skew"]["B"]),
+            step_a=_freeze_perm(p["step_perm"]["A"]),
+            step_b=_freeze_perm(p["step_perm"]["B"]),
+            step_c=_freeze_perm(p["step_perm"]["C"]),
+            collect_c=_freeze_perm(p["collect_C"]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TilingPlan:
+    """Intra-device (HBM -> VMEM) traversal: the wreath-product bits.
+
+    ``order="zorder"`` is the paper's Sec.-4.3 space-bounded schedule (Morton
+    bits of the output-block grid); ``rowmajor`` the baseline.  ``block_*``
+    override the kernel's VMEM-fitting defaults.  The default plan lowers to
+    ``repro.dist.local.local_matmul`` verbatim (which already routes Pallas
+    with the Z-order index map when eligible), keeping the numerics of the
+    pre-plan engine bit-for-bit.
+    """
+
+    order: str = "zorder"
+    block_m: Optional[int] = None
+    block_n: Optional[int] = None
+    block_k: Optional[int] = None
+    interpret: bool = False
+
+    @property
+    def is_default(self) -> bool:
+        return (self.order == "zorder" and self.block_m is None
+                and self.block_n is None and self.block_k is None
+                and not self.interpret)
+
+
+def mesh_fingerprint(mesh) -> Optional[Tuple]:
+    """Hashable identity of a mesh: axis names/sizes, device ids, platform.
+    Two meshes with equal fingerprints execute plans identically.  Memoized
+    per mesh object (jax meshes are hashable) so the per-dispatch cache-key
+    construction does not walk the device array every call."""
+    if mesh is None:
+        return None
+    try:
+        return _mesh_fingerprint_cached(mesh)
+    except TypeError:  # unhashable mesh stand-in (tests): compute directly
+        return _mesh_fingerprint_uncached(mesh)
+
+
+@functools.lru_cache(maxsize=64)
+def _mesh_fingerprint_cached(mesh) -> Tuple:
+    return _mesh_fingerprint_uncached(mesh)
+
+
+def _mesh_fingerprint_uncached(mesh) -> Tuple:
+    names = tuple(mesh.axis_names)
+    sizes = tuple(int(mesh.shape[a]) for a in names)
+    devs = tuple(
+        int(getattr(d, "id", i))
+        for i, d in enumerate(getattr(mesh, "devices", ()).flat)
+    ) if hasattr(getattr(mesh, "devices", None), "flat") else ()
+    platform = getattr(
+        getattr(mesh, "devices", None), "flat", [None])[0] if devs else None
+    platform = getattr(platform, "platform", None)
+    return (names, sizes, devs, platform)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePlan:
+    """One planned global matmul: (batch..., m, k) x (k, n) on ``mesh``.
+
+    Fields (paper object in brackets):
+      strategy     -- solution family executed [the equivariant map f]
+      axes / grid  -- mesh-axis roles and sizes [the network group N]
+      torus        -- placement/movement/collection perms [l_I, mu, l_I^-1]
+      replication  -- operand copies along the pod axis [Sec.-2.5 c-fold]
+      tiling       -- intra-device Z-order bits [iterated wreath product]
+      pad_a/pad_b  -- block-multiple padding taking the problem onto the grid
+      cost         -- the analytic Estimate that ranked this strategy
+    """
+
+    strategy: str
+    m: int
+    n: int
+    k: int
+    batch: Tuple[int, ...]
+    out_dtype: Any
+    mesh: Any = dataclasses.field(repr=False)
+    mesh_fp: Optional[Tuple] = None
+    axes: Tuple[str, ...] = ()
+    grid: Tuple[int, ...] = ()
+    replication: int = 1
+    pad_a: Tuple[int, int] = (1, 1)
+    pad_b: Tuple[int, int] = (1, 1)
+    schedule: Optional[TorusSchedule] = None
+    torus: Optional[TorusProgram] = None
+    tiling: TilingPlan = TilingPlan()
+    cost: Optional[Estimate] = None
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+
+def _square_axes(mesh, names) -> bool:
+    return mesh.shape[names[0]] == mesh.shape[names[1]]
+
+
+def mesh_candidates(mesh) -> Tuple[str, ...]:
+    """Strategies executable on ``mesh`` -- the topology *filter* (ranking is
+    the cost model's job, see ``choose``).  Ring strategies run on any mesh
+    (all axes flattened into one logical ring); 2-D torus strategies need two
+    axes (Cannon a square pair); the 2.5D family needs a pod axis plus an
+    in-layer pair."""
+    if mesh.size <= 1:
+        return ("local",)
+    names = tuple(mesh.axis_names)
+    cands = ["ring_ag", "ring_rs"]
+    if len(names) == 2:
+        if _square_axes(mesh, names):
+            cands.append("cannon")
+        cands.append("summa")
+    if len(names) >= 3:
+        if mesh.shape[names[1]] == mesh.shape[names[2]]:
+            cands.append("cannon25d")
+        cands.append("pod25d")
+    return tuple(cands)
+
+
+def _grid_for(mesh, strategy: str,
+              ax: Tuple[str, ...]) -> Optional[Tuple[int, ...]]:
+    """The device-grid factorization the lowering would run ``strategy``
+    on over the resolved axes ``ax``, so the estimate prices the real
+    program (a 2x8 mesh's SUMMA is a 2x8 SUMMA, not the canonical 4x4 of
+    tp=16)."""
+    if strategy in ("cannon", "summa", "cannon25d", "pod25d"):
+        return tuple(mesh.shape[a] for a in ax)
+    return None  # ring family / local: only mesh.size matters
+
+
+def rank_mesh_strategies(m: int, n: int, k: int, mesh,
+                         dtype_bytes: int = 2) -> Tuple[Estimate, ...]:
+    """Mesh-applicable strategies priced by ``estimate`` on the grids they
+    would actually execute, cheapest first."""
+    cands = mesh_candidates(mesh)
+    ests = [
+        estimate(s, m, n, k, mesh.size, dtype_bytes,
+                 grid=_grid_for(mesh, s, _plan_axes(mesh, s, None)))
+        for s in cands
+    ]
+    ests.sort(key=lambda e: (e.total_s, cands.index(e.strategy)))
+    return tuple(ests)
+
+
+# strategies with a shard_map lowering rule (xla_ag/xla_rs exist only in
+# the cost model; forcing them is rejected at plan time)
+_EXECUTABLE = frozenset(
+    ("cannon", "summa", "cannon25d", "pod25d", "ring_ag", "ring_rs", "local"))
+
+# minimum mesh-axis count per strategy, for early clear errors
+_MIN_AXES = {"cannon": 2, "summa": 2, "cannon25d": 3, "pod25d": 1,
+             "ring_ag": 1, "ring_rs": 1}
+
+
+def _plan_axes(mesh, strategy: str, axes: Optional[Tuple[str, ...]]):
+    """Resolve mesh-axis roles for ``strategy`` (explicit ``axes`` wins)."""
+    names = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+    need = _MIN_AXES.get(strategy, 0)
+    if len(names) < need:
+        raise ValueError(
+            f"strategy {strategy!r} needs a mesh with >= {need} axes; "
+            f"got {names}")
+    if axes is not None:
+        return names
+    if strategy in ("cannon", "summa"):
+        return names[:2]
+    if strategy == "cannon25d":
+        return names[:3]
+    if strategy == "pod25d":
+        rest = names[1:]
+        return (names[0],) + (rest[:2] if len(rest) >= 2 else ())
+    if strategy in ("ring_ag", "ring_rs"):
+        return names  # all axes flattened into one logical ring
+    return ()
+
+
+def build_plan(
+    m: int, n: int, k: int, *,
+    mesh=None,
+    strategy: Optional[str] = None,
+    batch: Tuple[int, ...] = (),
+    a_dtype=jnp.float32,
+    b_dtype=jnp.float32,
+    out_dtype=None,
+    axes: Optional[Tuple[str, ...]] = None,
+    schedule: Optional[TorusSchedule] = None,
+    tiling: Optional[TilingPlan] = None,
+    use_cache: bool = True,
+) -> SchedulePlan:
+    """Plan a global (batch..., m, k) x (k, n) matmul on ``mesh``.
+
+    Strategy selection ranks the mesh-applicable candidates with the analytic
+    cost model (``strategy`` forces one; ``schedule`` forces a custom torus
+    schedule).  Results are memoized -- see ``repro.plan.cache``.
+    """
+    from .cache import plan_cache
+
+    if out_dtype is None:
+        out_dtype = jnp.result_type(a_dtype, b_dtype)
+    out_dtype = jnp.dtype(out_dtype)
+    tiling = tiling if tiling is not None else TilingPlan()
+    key = (
+        "plan", batch, m, n, k, jnp.dtype(a_dtype).name, jnp.dtype(b_dtype).name,
+        out_dtype.name, mesh_fingerprint(mesh), strategy, axes, schedule, tiling,
+    )
+    if use_cache:
+        cached = plan_cache.get(key)
+        if cached is not None:
+            return cached
+    plan = _build_plan_uncached(
+        m, n, k, mesh=mesh, strategy=strategy, batch=batch,
+        a_dtype=a_dtype, out_dtype=out_dtype, axes=axes,
+        schedule=schedule, tiling=tiling,
+    )
+    if use_cache:
+        plan_cache.put(key, plan)
+    return plan
+
+
+def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
+                         out_dtype, axes, schedule, tiling) -> SchedulePlan:
+    flat_m = m * math.prod(batch) if batch else m
+    dtype_bytes = jnp.dtype(a_dtype).itemsize
+    cost = None
+    if schedule is not None and mesh is None:
+        raise ValueError("executing a TorusSchedule requires a mesh")
+    if (mesh is None or mesh.size == 1) and schedule is None:
+        return SchedulePlan(
+            strategy="local", m=m, n=n, k=k, batch=tuple(batch),
+            out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
+            tiling=tiling,
+            cost=estimate("local", flat_m, n, k, 1, dtype_bytes),
+        )
+    if schedule is not None:
+        strategy = strategy or "torus"
+        ax = _plan_axes(mesh, "cannon", axes)
+        return _torus_plan(m, n, k, batch, out_dtype, mesh, ax, schedule,
+                           tiling, cost=None, strategy=strategy)
+    if strategy is None:
+        ranked = rank_mesh_strategies(flat_m, n, k, mesh, dtype_bytes)
+        cost = ranked[0]
+        strategy = cost.strategy
+    elif strategy in _EXECUTABLE:
+        ax_cost = _plan_axes(mesh, strategy, axes)
+        cost = estimate(strategy, flat_m, n, k, mesh.size, dtype_bytes,
+                        grid=_grid_for(mesh, strategy, ax_cost))
+    else:
+        raise ValueError(
+            f"cannot plan strategy {strategy!r}; executable strategies are "
+            f"{sorted(_EXECUTABLE)}")
+
+    ax = _plan_axes(mesh, strategy, axes)
+    if strategy == "local":
+        return SchedulePlan(
+            strategy="local", m=m, n=n, k=k, batch=tuple(batch),
+            out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
+            tiling=tiling, cost=cost,
+        )
+    if strategy == "cannon":
+        q = mesh.shape[ax[0]]
+        return _torus_plan(m, n, k, batch, out_dtype, mesh, ax,
+                           cannon_schedule(q), tiling, cost, strategy="cannon")
+    if strategy == "summa":
+        qx, qy = mesh.shape[ax[0]], mesh.shape[ax[1]]
+        return SchedulePlan(
+            strategy="summa", m=m, n=n, k=k, batch=tuple(batch),
+            out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
+            axes=ax, grid=(qx, qy),
+            pad_a=(qx, qx * qy), pad_b=(qx * qy, qy),
+            tiling=tiling, cost=cost,
+        )
+    if strategy == "cannon25d":
+        c = mesh.shape[ax[0]]
+        q = mesh.shape[ax[1]]
+        if mesh.shape[ax[2]] != q:
+            raise ValueError("in-layer Cannon needs a square (q x q) layer")
+        sched = cannon_schedule(q)
+        return SchedulePlan(
+            strategy="cannon25d", m=m, n=n, k=k, batch=tuple(batch),
+            out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
+            axes=ax, grid=(c, q, q), replication=c,
+            pad_a=(q, c * q), pad_b=(c * q, q),
+            schedule=sched, torus=TorusProgram.from_schedule(sched),
+            tiling=tiling, cost=cost,
+        )
+    if strategy == "pod25d":
+        c = mesh.shape[ax[0]]
+        if len(ax) >= 3:
+            qx, qy = mesh.shape[ax[1]], mesh.shape[ax[2]]
+            return SchedulePlan(
+                strategy="pod25d", m=m, n=n, k=k, batch=tuple(batch),
+                out_dtype=out_dtype, mesh=mesh,
+                mesh_fp=mesh_fingerprint(mesh),
+                axes=ax, grid=(c, qx, qy), replication=c,
+                pad_a=(qx, c * qx * qy), pad_b=(c * qx * qy, qy),
+                tiling=tiling, cost=cost,
+            )
+        return SchedulePlan(
+            strategy="pod25d", m=m, n=n, k=k, batch=tuple(batch),
+            out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
+            axes=ax[:1], grid=(c,), replication=c,
+            pad_a=(1, c), pad_b=(c, 1),
+            tiling=tiling, cost=cost,
+        )
+    if strategy in ("ring_ag", "ring_rs"):
+        t = 1
+        for a_ in ax:
+            t *= mesh.shape[a_]
+        pad_a = (t, 1) if strategy == "ring_ag" else (t, t)
+        pad_b = (1, t) if strategy == "ring_ag" else (t, 1)
+        return SchedulePlan(
+            strategy=strategy, m=m, n=n, k=k, batch=tuple(batch),
+            out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
+            axes=ax, grid=(t,), pad_a=pad_a, pad_b=pad_b,
+            tiling=tiling, cost=cost,
+        )
+    raise ValueError(f"cannot plan strategy {strategy!r}")
+
+
+def _torus_plan(m, n, k, batch, out_dtype, mesh, ax, schedule, tiling, cost,
+                *, strategy) -> SchedulePlan:
+    q = schedule.q
+    if mesh.shape[ax[0]] != q or mesh.shape[ax[1]] != q:
+        raise ValueError(
+            f"mesh axes ({mesh.shape[ax[0]]}, {mesh.shape[ax[1]]}) "
+            f"do not span the schedule's {q} x {q} torus")
+    if schedule.t != q:
+        raise ValueError("executor supports the t = q schedule family")
+    return SchedulePlan(
+        strategy=strategy, m=m, n=n, k=k, batch=tuple(batch),
+        out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
+        axes=tuple(ax[:2]), grid=(q, q), pad_a=(q, q), pad_b=(q, q),
+        schedule=schedule, torus=TorusProgram.from_schedule(schedule),
+        tiling=tiling, cost=cost,
+    )

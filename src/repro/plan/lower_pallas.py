@@ -1,0 +1,53 @@
+"""Intra-device lowering: wire the plan's tiling order into the Pallas
+matmul grid index maps.
+
+A ``SchedulePlan`` carries a ``TilingPlan`` -- the iterated-wreath-product
+(Z-order) bits of Sec. 4.3.  ``lower_pallas(plan)`` turns it into the local
+block-multiply callable the shard_map bodies run on each device:
+
+  * default tiling -> ``repro.dist.local.local_matmul`` verbatim (already
+    Pallas-routed with the Z-order index map on TPU/GPU, fp32-accumulating
+    jnp elsewhere) -- bit-identical to the pre-plan engine;
+  * overridden tiling (order / blocks / interpret) -> a closure over
+    ``repro.kernels.matmul.matmul`` with those arguments, which feeds the
+    order into ``zorder_grid_index_map`` via the kernel's scalar-prefetch
+    tables; ineligible shapes/backends fall back to the jnp oracle with the
+    same fp32-accumulation contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.local import _pallas_eligible, local_matmul
+
+from .ir import SchedulePlan, TilingPlan
+
+
+def lower_tiling(tiling: TilingPlan):
+    """Local-matmul callable executing ``tiling`` (see module docstring)."""
+    if tiling.is_default:
+        return local_matmul
+
+    def tiled_local_matmul(a: jax.Array, b: jax.Array, *,
+                           out_dtype=None) -> jax.Array:
+        if out_dtype is None:
+            out_dtype = jnp.result_type(a.dtype, b.dtype)
+        if _pallas_eligible(a, b) or tiling.interpret and a.ndim == 2:
+            from repro.kernels.matmul import matmul as pallas_matmul
+
+            return pallas_matmul(
+                a, b, order=tiling.order,
+                block_m=tiling.block_m, block_n=tiling.block_n,
+                block_k=tiling.block_k, interpret=tiling.interpret,
+                out_dtype=out_dtype,
+            )
+        return jnp.matmul(
+            a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+    return tiled_local_matmul
+
+
+def lower_pallas(plan: SchedulePlan):
+    """Per-device lowering of ``plan``: its tiling order as a callable."""
+    return lower_tiling(plan.tiling)

@@ -60,3 +60,27 @@ def constrain(x: jax.Array, *logical_axes) -> jax.Array:
 
 def named_sharding(mesh: Mesh, *logical_axes) -> NamedSharding:
     return NamedSharding(mesh, P(*(resolve_axis(a, mesh) for a in logical_axes)))
+
+
+def planned_matmul_axes(d_in: int, d_out: int, *, mesh: Optional[Mesh] = None,
+                        tokens: int = 8192, dtype_bytes: int = 2) -> Tuple:
+    """Partition axes for a (d_in, d_out) weight, ranked by ``plan.estimate``.
+
+    Column-parallel ``(None, 'model')`` means the activations must be
+    gathered along the contraction (the ring_ag / all-gather schedule:
+    tokens x d_in words move); row-parallel ``('model', None)`` means the
+    partial outputs must be reduce-scattered (ring_rs: tokens x d_out
+    words).  Pricing both 1-D torus solutions with the plan cost model
+    recovers the Megatron convention -- column-parallel up-projections,
+    row-parallel down-projections -- from the word counts instead of
+    hand-written rules, and keeps working when d_in ~ d_out.
+    """
+    mesh = mesh if mesh is not None else _MESH.get()
+    tp = mesh.shape.get(MODEL_AXIS, 1) if mesh is not None else 1
+    if tp <= 1:
+        return (None, None)
+    from repro.plan import estimate
+
+    col = estimate("ring_ag", tokens, d_out, d_in, tp, dtype_bytes)
+    row = estimate("ring_rs", tokens, d_out, d_in, tp, dtype_bytes)
+    return (None, MODEL_AXIS) if col.total_s <= row.total_s else (MODEL_AXIS, None)

@@ -1,0 +1,267 @@
+"""Plan IR, planner, cache, and cost-model-ranked mesh dispatch.
+
+Pure-planning tests: no multi-device execution (that is
+tests/test_plan_exec.py's subprocess job), so meshes here are duck-typed
+stand-ins carrying exactly the attributes the planner reads
+(axis_names / shape / size / devices).
+"""
+import math
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import plan as planlib
+from repro.core.schedule import cannon_schedule
+from repro.core.zorder import enclosing_pow2, zorder_schedule
+from repro.dist.api import _mesh_heuristic, choose
+from repro.plan import (SchedulePlan, TilingPlan, TorusProgram, build_plan,
+                        cache_clear, cache_stats, lower_tiling,
+                        mesh_candidates, mesh_fingerprint)
+from repro.runtime.sharding import planned_matmul_axes
+
+
+def fake_mesh(sizes, names):
+    """Planner-facing mesh stand-in (no devices backing it)."""
+    total = math.prod(sizes)
+    return SimpleNamespace(
+        axis_names=tuple(names),
+        shape=dict(zip(names, sizes)),
+        size=total,
+        devices=np.array([SimpleNamespace(id=i, platform="cpu")
+                          for i in range(total)]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# choose(mesh=...) must rank with the cost model, topology only as filter
+# ---------------------------------------------------------------------------
+
+
+def test_choose_mesh_overrules_topology_heuristic():
+    """Regression pin for the PR-1 bug: the mesh path of choose() returned
+    a strategy from topology shape alone.  On a square mesh with a huge
+    contraction dim the heuristic says Cannon (square => Cannon), but
+    Cannon shifts O(k)-sized panels while reduce-scattering the small
+    output is orders cheaper -- the cost model must win."""
+    mesh = fake_mesh((2, 2), ("x", "y"))
+    m, n, k = 256, 256, 1 << 16
+    assert _mesh_heuristic(mesh, m, n, k) == "cannon"
+    assert choose(m, n, k, mesh=mesh) == "ring_rs"
+
+
+def test_choose_mesh_agrees_when_topology_is_right():
+    # compute-bound square problem: Cannon's overlapped one-hop shifts win
+    mesh = fake_mesh((2, 2), ("x", "y"))
+    assert choose(4096, 4096, 4096, mesh=mesh) == \
+        _mesh_heuristic(mesh, 4096, 4096, 4096) == "cannon"
+    # 1-D ring: gather the smaller operand, as the heuristic also says
+    ring = fake_mesh((4,), ("t",))
+    assert choose(64, 1024, 64, mesh=ring) == "ring_ag"
+    assert choose(64, 64, 1024, mesh=ring) == "ring_rs"
+
+
+def test_mesh_candidates_topology_filter():
+    assert mesh_candidates(fake_mesh((1,), ("t",))) == ("local",)
+    c2 = mesh_candidates(fake_mesh((2, 2), ("x", "y")))
+    assert "cannon" in c2 and "summa" in c2 and "ring_ag" in c2
+    # rectangular 2-D mesh: Cannon filtered out, SUMMA stays
+    c_rect = mesh_candidates(fake_mesh((2, 4), ("x", "y")))
+    assert "cannon" not in c_rect and "summa" in c_rect
+    c3 = mesh_candidates(fake_mesh((2, 2, 2), ("pod", "x", "y")))
+    assert "cannon25d" in c3 and "pod25d" in c3
+    c3r = mesh_candidates(fake_mesh((2, 2, 4), ("pod", "x", "y")))
+    assert "cannon25d" not in c3r and "pod25d" in c3r
+
+
+# ---------------------------------------------------------------------------
+# plan IR reifies the schedule algebra
+# ---------------------------------------------------------------------------
+
+
+def test_cannon_plan_reifies_schedule_perms():
+    mesh = fake_mesh((3, 3), ("x", "y"))
+    plan = build_plan(30, 30, 30, mesh=mesh, strategy="cannon",
+                      a_dtype=jnp.float32, b_dtype=jnp.float32)
+    assert isinstance(plan, SchedulePlan)
+    sched = cannon_schedule(3)
+    assert plan.schedule == sched
+    prog = plan.torus
+    assert isinstance(prog, TorusProgram)
+    assert prog.q == 3 and prog.steps == 3
+    assert dict(prog.shifts) == sched.movements()
+    assert prog.skew_a == tuple(sched.placement_perm("A"))
+    assert prog.step_b == tuple(sched.movement_perm("B"))
+    # Cannon's C is stationary in canonical layout: collection elided
+    assert prog.collect_c == ()
+    assert plan.pad_a == (3, 3) and plan.grid == (3, 3)
+    assert plan.replication == 1
+    assert plan.cost is not None and plan.cost.strategy == "cannon"
+
+
+def test_25d_plan_replication_and_padding():
+    mesh = fake_mesh((2, 2, 2), ("pod", "x", "y"))
+    plan = build_plan(64, 64, 64, mesh=mesh, strategy="cannon25d")
+    assert plan.replication == 2
+    assert plan.pad_a == (2, 4) and plan.pad_b == (4, 2)
+    plan_s = build_plan(64, 64, 64, mesh=mesh, strategy="pod25d")
+    assert plan_s.pad_a == (2, 8) and plan_s.pad_b == (8, 2)
+
+
+def test_ring_plan_flattens_all_axes():
+    mesh = fake_mesh((2, 2), ("x", "y"))
+    plan = build_plan(64, 64, 64, mesh=mesh, strategy="ring_ag")
+    assert plan.axes == ("x", "y") and plan.grid == (4,)
+    assert plan.pad_a == (4, 1) and plan.pad_b == (1, 4)
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hits_and_key_sensitivity():
+    cache_clear()
+    mesh = fake_mesh((2, 2), ("x", "y"))
+    p1 = build_plan(128, 128, 128, mesh=mesh, strategy="cannon")
+    s = cache_stats()
+    assert s["misses"] == 1 and s["hits"] == 0
+    p2 = build_plan(128, 128, 128, mesh=mesh, strategy="cannon")
+    s = cache_stats()
+    assert s["hits"] == 1 and p2 is p1
+    # every key component must invalidate: shape, dtype, mesh, strategy
+    build_plan(128, 128, 256, mesh=mesh, strategy="cannon")
+    build_plan(128, 128, 128, mesh=mesh, strategy="cannon",
+               a_dtype=jnp.bfloat16)
+    build_plan(128, 128, 128, mesh=mesh, strategy="cannon",
+               out_dtype=jnp.bfloat16)
+    build_plan(128, 128, 128, mesh=mesh, strategy="summa")
+    build_plan(128, 128, 128, mesh=fake_mesh((2, 2), ("a", "b")),
+               strategy="cannon")
+    build_plan(128, 128, 128, mesh=mesh, strategy="cannon", batch=(8,))
+    s = cache_stats()
+    assert s["hits"] == 1 and s["misses"] == 7
+
+
+def test_mesh_fingerprint_distinguishes_meshes():
+    m1 = fake_mesh((2, 2), ("x", "y"))
+    m2 = fake_mesh((4,), ("x",))
+    assert mesh_fingerprint(m1) != mesh_fingerprint(m2)
+    assert mesh_fingerprint(None) is None
+    assert mesh_fingerprint(m1) == mesh_fingerprint(fake_mesh((2, 2), ("x", "y")))
+
+
+# ---------------------------------------------------------------------------
+# local execution paths (1 device, no mesh)
+# ---------------------------------------------------------------------------
+
+
+def test_symmetric_matmul_batched_local():
+    import jax
+    from repro.dist.api import symmetric_matmul
+
+    a = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 7), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (7, 4), jnp.float32)
+    out = symmetric_matmul(a, b)
+    assert out.shape == (3, 5, 4)
+    np.testing.assert_allclose(
+        np.asarray(out), np.einsum("bmk,kn->bmn", a, b), rtol=1e-5, atol=1e-5)
+    # batched-both
+    b3 = jax.random.normal(jax.random.PRNGKey(2), (3, 7, 4), jnp.float32)
+    out2 = symmetric_matmul(a, b3)
+    np.testing.assert_allclose(
+        np.asarray(out2), np.einsum("bmk,bkn->bmn", a, b3), rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):
+        symmetric_matmul(a, jnp.zeros((2, 7, 4)))  # mismatched batch dims
+    with pytest.raises(ValueError):
+        symmetric_matmul(a, jnp.zeros((8, 4)))  # contraction mismatch
+
+
+def test_lower_tiling_default_is_local_matmul():
+    from repro.dist.local import local_matmul
+
+    assert lower_tiling(TilingPlan()) is local_matmul
+    assert not TilingPlan(order="rowmajor").is_default
+
+
+def test_lower_tiling_override_matches_oracle():
+    import jax
+
+    a = jax.random.normal(jax.random.PRNGKey(0), (48, 32), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (32, 16), jnp.float32)
+    fn = lower_tiling(TilingPlan(order="rowmajor", block_m=16))
+    np.testing.assert_allclose(
+        np.asarray(fn(a, b, out_dtype=jnp.float32)), np.asarray(a @ b),
+        rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sharding consumers consult plan.estimate
+# ---------------------------------------------------------------------------
+
+
+def test_planned_matmul_axes_recovers_megatron_convention():
+    mesh = fake_mesh((4,), ("model",))
+    # up-projection d_in < d_out: gather the small activations (column-par)
+    assert planned_matmul_axes(1024, 4096, mesh=mesh) == (None, "model")
+    # down-projection d_in > d_out: reduce-scatter the small output (row-par)
+    assert planned_matmul_axes(4096, 1024, mesh=mesh) == ("model", None)
+    # no model axis: replicated
+    assert planned_matmul_axes(1024, 4096, mesh=fake_mesh((4,), ("data",))) \
+        == (None, None)
+
+
+def test_ranked_linear_spec_guards():
+    from jax.sharding import PartitionSpec as P
+    from repro.models.sharding_rules import ranked_linear_spec
+
+    mesh = fake_mesh((4,), ("model",))
+    assert ranked_linear_spec((1024, 4096), mesh) == P(None, "model")
+    assert ranked_linear_spec((4096, 1024), mesh) == P("model", None)
+    # too small / wrong rank / non-divisible -> replicated
+    assert ranked_linear_spec((64, 4096), mesh) == P()
+    assert ranked_linear_spec((4096,), mesh) == P()
+    # chosen (row-parallel) axis not divisible by model=4 -> dropped
+    assert ranked_linear_spec((4098, 130), mesh) == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# zorder enclosing-cube simplification (satellite)
+# ---------------------------------------------------------------------------
+
+
+def _legacy_side(gi, gj, gk):
+    """The pre-simplification bit_length + corrective-while form."""
+    side = 1 << max(gi - 1, gj - 1, gk - 1, 0).bit_length() \
+        if max(gi, gj, gk) > 1 else 1
+    while side < max(gi, gj, gk):
+        side <<= 1
+    return side
+
+
+def test_enclosing_pow2_matches_legacy_form():
+    for n in list(range(1, 600)) + [1023, 1024, 1025, 4095, 4096, 4097]:
+        s = enclosing_pow2(n)
+        assert s == _legacy_side(n, 1, 1)
+        assert s >= n and s & (s - 1) == 0  # power of two, covers n
+        assert s == 1 or s < 2 * n  # minimal
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=80, deadline=None)
+    @given(g=st.tuples(st.integers(1, 21), st.integers(1, 21),
+                       st.integers(1, 21)))
+    def test_zorder_non_pow2_grids_property(g):
+        """Non-power-of-two grids: the filtered enclosing-cube traversal is
+        a permutation of the grid and its side is the minimal pow2 cover."""
+        order = zorder_schedule(*g)
+        assert len(order) == g[0] * g[1] * g[2]
+        assert len(set(order)) == len(order)
+        side = enclosing_pow2(max(g))
+        assert all(i < side and j < side and k < side for i, j, k in order)
+except ImportError:  # pragma: no cover - hypothesis stub covers CI
+    pass
