@@ -6,6 +6,12 @@ bench_results.json for the experiment index.
 ``--smoke`` runs the tiny-shape subset (no subprocess device farms) and
 exits nonzero on any bench error -- the CI job that catches plan-cache
 and dispatch regressions before merge.
+
+``--conformance`` runs the ``repro.verify`` conformance matrix (strategy x
+mesh shape x {square, ragged, batched} x dtype) on forced-host devices
+(``CONFORMANCE_DEVICES`` env, default 8): every cell's executed collectives
+must match the schedule trace and the analytic cost model exactly.  Exits
+nonzero on any non-conforming cell.
 """
 from __future__ import annotations
 
@@ -22,10 +28,36 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
+def run_conformance() -> int:
+    """Forced-host conformance matrix; must run before jax is imported so
+    the device-count flag takes effect."""
+    devices = int(os.environ.get("CONFORMANCE_DEVICES", "8"))
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={devices}".strip())
+    from repro.verify import run_matrix
+
+    rows = run_matrix()
+    print("strategy,mesh,case,dtype,ok,words_per_node,error")
+    for r in rows:
+        mesh = "x".join(str(s) for s in r["mesh"])
+        print(f"{r['strategy']},{mesh},{r['case']},{r['dtype']},"
+              f"{r['ok']},{r['words_per_node']},{r['error']}", flush=True)
+    bad = [r for r in rows if not r["ok"]]
+    with open("conformance_results.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# {len(rows)} cells, {len(bad)} non-conforming")
+    return 1 if bad else 0
+
+
 def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if "--conformance" in argv:
+        return run_conformance()
+
     from benchmarks.paper_benches import ALL_BENCHES, SMOKE_BENCHES
 
-    argv = sys.argv[1:] if argv is None else argv
     smoke = "--smoke" in argv
     benches = SMOKE_BENCHES if smoke else ALL_BENCHES
     rows = []

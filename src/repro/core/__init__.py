@@ -11,11 +11,16 @@ Public surface:
   zorder         -- space-bounded schedules as Morton orders (Sec. 4.3)
 """
 from . import cost, fattree, groups, hexarray, homomorphism, schedule, solver, zorder
-from .schedule import TorusSchedule, Torus25DSchedule, cannon_schedule, torus_hops
+from .cost import perm_link_words
+from .schedule import (TorusSchedule, Torus25DSchedule, cannon_schedule,
+                       movement_equations_hold, perm_is_bijection,
+                       perm_translation, torus_hops)
 from .solver import Solution, solve_torus, minimal_hop_cost, is_cannon_like
 
 __all__ = [
     "cost", "fattree", "groups", "hexarray", "homomorphism", "schedule",
     "solver", "zorder", "TorusSchedule", "Torus25DSchedule", "cannon_schedule",
     "torus_hops", "Solution", "solve_torus", "minimal_hop_cost", "is_cannon_like",
+    "perm_is_bijection", "perm_translation", "movement_equations_hold",
+    "perm_link_words",
 ]

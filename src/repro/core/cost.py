@@ -73,6 +73,20 @@ def schedule_25d_cost(sched: Torus25DSchedule, n: int) -> CommReport:
     )
 
 
+def perm_link_words(perm, q: int, block_words: float) -> float:
+    """Torus link-words of one executed ppermute: each (src, dst) pair's
+    block transits ``torus_hops`` links under minimal routing on the q x q
+    torus.  For a translation perm this is hops(mu) * q^2 * block_words --
+    the per-step term of ``torus_schedule_cost`` -- but the formula accepts
+    arbitrary perms so conformance can price a *wrong* program too."""
+    total = 0.0
+    for src, dst in perm:
+        sx, sy = divmod(int(src), q)
+        dx, dy = divmod(int(dst), q)
+        total += torus_hops((dx - sx, dy - sy), q) * block_words
+    return total
+
+
 # ---------------------------------------------------------------------------
 # Lower bounds
 # ---------------------------------------------------------------------------

@@ -248,6 +248,79 @@ def torus_hops(vec: Tuple[int, int], q: int) -> int:
     return min(dx, q - dx) + min(dy, q - dy)
 
 
+# ---------------------------------------------------------------------------
+# Equivariance predicates on lowered (src, dst) device permutations.
+#
+# These are the machine-checkable halves of the paper's algebra, consumed by
+# ``repro.verify.conformance``: a ppermute emitted by an equivariant schedule
+# must be (a) a bijection on the torus and (b) a *translation* -- the image
+# of the movement homomorphism mu commutes with the torus action, so every
+# (src, dst) pair realizes the same network element.
+# ---------------------------------------------------------------------------
+
+
+def perm_is_bijection(perm, size: int) -> bool:
+    """``perm`` (pairs of flat device ids, identity pairs may be elided)
+    extends to a bijection on [size]: listed sources and destinations are
+    distinct and within range."""
+    perm = tuple(perm)
+    srcs = [s for s, _ in perm]
+    dsts = [d for _, d in perm]
+    if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+        return False
+    if any(not (0 <= v < size) for v in srcs + dsts):
+        return False
+    # elided identity pairs must not collide with listed endpoints
+    elided = set(range(size)) - set(srcs)
+    return elided == set(range(size)) - set(dsts)
+
+
+def perm_translation(perm, q: int) -> Optional[Tuple[int, int]]:
+    """The constant torus translation mu realized by ``perm`` over the
+    flattened q x q torus (flat id = x * q + y), or None when the pairs do
+    not share one -- i.e. the permutation is NOT the image of a movement
+    homomorphism and the schedule's commutative diagram is violated."""
+    perm = tuple(perm)
+    mu = None
+    for src, dst in perm:
+        sx, sy = divmod(int(src), q)
+        dx, dy = divmod(int(dst), q)
+        step = ((dx - sx) % q, (dy - sy) % q)
+        if mu is None:
+            mu = step
+        elif step != mu:
+            return None
+    # identity pairs elided from the listing are only consistent with mu = 0
+    if mu is not None and mu != (0, 0) and len(perm) != q * q:
+        return None
+    return mu if mu is not None else (0, 0)
+
+
+def movement_equations_hold(sched: TorusSchedule,
+                            moves: Optional[Dict[VarName, Tuple[int, int]]]
+                            = None) -> bool:
+    """Fig.-10 commutative diagram: each variable set's per-step network
+    element mu must satisfy (x_a, y_a) == t_a * mu (mod q) for the absent
+    index a.  ``moves`` are the movement vectors to test -- pass the mus
+    recovered from an *executed* program's permutations to verify it
+    against the schedule's algebra (the discriminating use; with the
+    schedule's own derived movements the equations hold by construction
+    whenever they are solvable)."""
+    if moves is None:
+        moves = sched.movements()
+    if moves is None:
+        return False
+    for var in ("A", "B", "C"):
+        if var not in moves:
+            return False
+        mx, my = moves[var]
+        _, absent = VAR_INDEX[var]
+        xa, ya, ta = sched.M[absent]
+        if (ta * mx - xa) % sched.q or (ta * my - ya) % sched.q:
+            return False
+    return True
+
+
 def cannon_schedule(q: int) -> TorusSchedule:
     """The classical Cannon solution recovered in Sec. 4.1.
 

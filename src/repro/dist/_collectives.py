@@ -1,0 +1,28 @@
+"""Interceptable collective seam for the dist lowering rules.
+
+Every word a lowered schedule moves goes through one of these three
+wrappers; they are plain pass-throughs to ``jax.lax`` in production.
+``repro.verify.interceptor`` monkeypatches them (within a context manager)
+to count the collectives a shard_map body actually emits -- the measured
+leg of the trace == interceptor == cost-model conformance triangle.
+
+Only *data-movement* calls route through here.  Axis-size queries
+(``lax.psum(1, axis)``) and anything outside the strategy bodies call
+``jax.lax`` directly and are invisible to the interceptor, exactly as they
+are invisible to the cost model.
+"""
+from __future__ import annotations
+
+from jax import lax
+
+
+def ppermute(x, axis_name, perm):
+    return lax.ppermute(x, axis_name, perm)
+
+
+def all_gather(x, axis_name, *, axis, tiled):
+    return lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
+
+
+def psum(x, axis_name):
+    return lax.psum(x, axis_name)

@@ -24,10 +24,10 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core.schedule import TorusSchedule, cannon_schedule
 
+from . import _collectives
 from ._util import pad_to
 from .local import local_matmul
 
@@ -69,7 +69,7 @@ def _is_identity(perm) -> bool:
 def _permute(x, axes, perm):
     if _is_identity(perm):
         return x
-    return lax.ppermute(x, axes, list(perm))
+    return _collectives.ppermute(x, axes, list(perm))
 
 
 def torus_program_body(prog, axis_x: str, axis_y: str, local_fn=None):

@@ -25,8 +25,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
+from . import _collectives
 from .cannon import torus_program_body
 from .local import local_matmul
 
@@ -48,7 +48,7 @@ def pod25d_slab_body(pod_axis: str, out_dtype, local_fn=None):
 
     def body(ab, bb):
         part = local_fn(ab, bb, out_dtype=jnp.float32)
-        return lax.psum(part, pod_axis).astype(out_dtype)
+        return _collectives.psum(part, pod_axis).astype(out_dtype)
 
     return body
 
@@ -60,10 +60,10 @@ def pod25d_summa_body(pod_axis: str, axis_x: str, axis_y: str, out_dtype,
     local_fn = local_fn or local_matmul
 
     def body(ab, bb):
-        arow = lax.all_gather(ab, axis_y, axis=1, tiled=True)  # (M/qx, K/c)
-        bcol = lax.all_gather(bb, axis_x, axis=0, tiled=True)  # (K/c, N/qy)
+        arow = _collectives.all_gather(ab, axis_y, axis=1, tiled=True)  # (M/qx, K/c)
+        bcol = _collectives.all_gather(bb, axis_x, axis=0, tiled=True)  # (K/c, N/qy)
         part = local_fn(arow, bcol, out_dtype=jnp.float32)
-        return lax.psum(part, pod_axis).astype(out_dtype)
+        return _collectives.psum(part, pod_axis).astype(out_dtype)
 
     return body
 
@@ -78,7 +78,7 @@ def cannon25d_body(pod_axis: str, axis_x: str, axis_y: str, prog,
 
     def body(ab, bb):
         acc = inner(ab, bb)
-        return lax.psum(acc, pod_axis).astype(out_dtype)
+        return _collectives.psum(acc, pod_axis).astype(out_dtype)
 
     return body
 

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from . import _collectives
 from .local import local_matmul
 
 
@@ -55,7 +56,7 @@ def ring_ag_matmul(x: jax.Array, w: jax.Array, axis, *,
     cur = x
     for s in range(n):
         # issue the permute first so it overlaps the matmul below
-        nxt = lax.ppermute(cur, axis, perm) if s < n - 1 else None
+        nxt = _collectives.ppermute(cur, axis, perm) if s < n - 1 else None
         prod = local_fn(cur, w, out_dtype=out_dtype)
         src = (idx - s) % n  # origin device of the resident chunk
         start = (0,) * (len(out_shape) - 2) + (src * chunk, 0)
@@ -91,5 +92,5 @@ def ring_rs_matmul(y: jax.Array, w: jax.Array, axis, *,
         mine = lax.dynamic_slice(partial, start, slab)
         acc = mine if acc is None else acc + mine
         if s < n - 1:
-            acc = lax.ppermute(acc, axis, perm)
+            acc = _collectives.ppermute(acc, axis, perm)
     return acc.astype(out_dtype)

@@ -17,8 +17,8 @@ engine.
 from __future__ import annotations
 
 import jax
-from jax import lax
 
+from . import _collectives
 from .local import local_matmul
 
 
@@ -28,8 +28,8 @@ def summa_body(axis_x: str, axis_y: str, out_dtype, local_fn=None):
     local_fn = local_fn or local_matmul
 
     def body(ab, bb):
-        arow = lax.all_gather(ab, axis_y, axis=1, tiled=True)  # (M/qx, K)
-        bcol = lax.all_gather(bb, axis_x, axis=0, tiled=True)  # (K, N/qy)
+        arow = _collectives.all_gather(ab, axis_y, axis=1, tiled=True)  # (M/qx, K)
+        bcol = _collectives.all_gather(bb, axis_x, axis=0, tiled=True)  # (K, N/qy)
         return local_fn(arow, bcol, out_dtype=out_dtype)
 
     return body

@@ -48,7 +48,7 @@ from .context import planned_matmuls, planned_mesh
 from .ir import (SchedulePlan, TilingPlan, TorusProgram, build_plan,
                  mesh_candidates, mesh_fingerprint, rank_mesh_strategies)
 from .lower_pallas import lower_pallas, lower_tiling
-from .lower_shard_map import execute_plan, lower_shard_map
+from .lower_shard_map import execute_plan, lower_shard_map, on_lower
 
 # the plan package's cost model is the dist analytic model; re-exported so
 # consumers (runtime.sharding, models.sharding_rules) can "consult
@@ -58,7 +58,8 @@ from repro.dist.api import Estimate, estimate  # noqa: E402  (cycle-safe)
 __all__ = [
     "SchedulePlan", "TilingPlan", "TorusProgram", "build_plan",
     "mesh_candidates", "mesh_fingerprint", "rank_mesh_strategies",
-    "execute_plan", "lower_shard_map", "lower_pallas", "lower_tiling",
+    "execute_plan", "lower_shard_map", "on_lower", "lower_pallas",
+    "lower_tiling",
     "PlanCache", "plan_cache", "cache_stats", "cache_clear",
     "planned_matmuls", "planned_mesh", "Estimate", "estimate",
 ]

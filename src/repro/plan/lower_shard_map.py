@@ -33,6 +33,31 @@ from .ir import SchedulePlan
 from .lower_pallas import lower_pallas
 
 
+# Lowering observers: ``repro.verify`` hooks here to learn which plan is
+# behind the collectives its interceptor counts.  Callbacks receive the
+# plan on EVERY lowering request (cached or not).
+_LOWER_OBSERVERS = []
+
+
+def on_lower(callback):
+    """Register ``callback(plan)`` to fire on each ``lower_shard_map`` call;
+    returns a zero-argument unregister function."""
+    _LOWER_OBSERVERS.append(callback)
+
+    def remove():
+        try:
+            _LOWER_OBSERVERS.remove(callback)
+        except ValueError:
+            pass
+
+    return remove
+
+
+def _notify_lower(plan: SchedulePlan) -> None:
+    for cb in tuple(_LOWER_OBSERVERS):
+        cb(plan)
+
+
 def lower_shard_map(plan: SchedulePlan):
     """Compile ``plan`` to a callable executing one global 2-D matmul
     (m, k) x (k, n) -> (m, n) as the planned shard_map/ppermute program.
@@ -43,6 +68,7 @@ def lower_shard_map(plan: SchedulePlan):
     together with the plan cache this makes a repeat ``symmetric_matmul``
     call pure dictionary lookups down to the jit boundary.  Plans built on
     unhashable duck-typed meshes (tests) lower uncached."""
+    _notify_lower(plan)
     try:
         return _lower_shard_map_cached(plan)
     except TypeError:

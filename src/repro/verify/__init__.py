@@ -1,0 +1,40 @@
+"""repro.verify -- trace-level conformance for executed schedules.
+
+The paper's claim is that equivariant maps *are* schedules with provable
+time and communication costs; this package machine-checks it for every
+program the repo executes, via three independent derivations of the same
+communication:
+
+  trace        -- a tracing interpreter replaying any ``SchedulePlan`` on a
+                  virtual topology (torus, pod, ring; plus the fat-tree and
+                  hex-array machine models of ``repro.core``)
+  interceptor  -- a counting wrapper over the ``repro.dist._collectives``
+                  seam capturing the collectives the real shard_map
+                  lowering emits
+  conformance  -- ``check(plan)``: trace == interceptor == analytic cost
+                  model, plus the equivariance/bijection/translation
+                  predicates and the Irony--Toledo--Tiskin bound;
+                  ``run_matrix`` sweeps strategy x mesh x case x dtype
+
+Every future lowering (fat-tree, hex) lands against this oracle instead of
+only bitwise-output tests.
+"""
+from . import conformance, interceptor, trace
+from .conformance import (ConformanceError, ConformanceReport, check,
+                          compare_records, hlo_collective_bytes,
+                          matrix_cells, predicted_words_per_device,
+                          run_matrix)
+from .interceptor import Capture, intercept, measure_plan
+from .trace import (CollectiveRecord, MachineTrace, Trace, canonical_perm,
+                    fattree_level_words, padded_dims, trace_fattree,
+                    trace_hex, trace_plan)
+
+__all__ = [
+    "conformance", "interceptor", "trace",
+    "ConformanceError", "ConformanceReport", "check", "compare_records",
+    "hlo_collective_bytes", "matrix_cells", "predicted_words_per_device",
+    "run_matrix", "Capture", "intercept", "measure_plan",
+    "CollectiveRecord", "MachineTrace", "Trace", "canonical_perm",
+    "fattree_level_words", "padded_dims", "trace_fattree", "trace_hex",
+    "trace_plan",
+]

@@ -1,0 +1,387 @@
+"""Conformance checker: executed schedules must match the paper's algebra.
+
+``check(plan)`` closes the loop the paper leaves implicit -- that the
+equivariant map IS the schedule, with provable costs (Sec. 2.4) -- by
+asserting three independent derivations of a plan's communication agree:
+
+  1. **Structure** (the algebra): every emitted ppermute is a bijection;
+     movement perms are torus translations (the movement homomorphism
+     commutes with the torus action); the reified ``TorusProgram`` is
+     byte-identical to the one derived from the plan's schedule; the
+     Fig.-10 diagram equations hold; per-step single-copy memory holds.
+  2. **Cost model** (the analytics): the virtual trace's movement words
+     equal the schedule-derived word count, equal ``dist.api.estimate``'s
+     closed form on the padded problem, and -- for square torus problems --
+     the trace's link-words equal ``core.cost.torus_schedule_cost``.
+     Measured words must also respect the Irony--Toledo--Tiskin bandwidth
+     lower bound at the trace's own memory footprint.
+  3. **Execution** (optional, ``measure=True``): the collectives the real
+     shard_map lowering emits, captured by ``repro.verify.interceptor`` at
+     the ``repro.dist._collectives`` seam, form exactly the trace's
+     multiset -- kind, group, shard words, and permutation pairs.
+
+Any disagreement raises ``ConformanceError`` naming the leg that broke.
+``run_matrix`` sweeps strategy x mesh shape x {square, ragged, batched} x
+dtype on the available (forced-host) devices -- the pytest ``conformance``
+suite and ``benchmarks/run.py --conformance`` both drive it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cost import bandwidth_lower_bound, torus_schedule_cost
+from repro.core.schedule import (movement_equations_hold, perm_is_bijection,
+                                 perm_translation)
+
+from .trace import (CollectiveRecord, Trace, padded_dims, torus_single_copy_ok,
+                    trace_plan)
+
+
+class ConformanceError(AssertionError):
+    """An executed or reified schedule disagrees with the algebra/model."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ConformanceReport:
+    strategy: str
+    mesh_size: int
+    grid: Tuple[int, ...]
+    padded: Tuple[int, int, int]
+    words_per_node: float          # movement/gather/reduce phases
+    link_words: Optional[float]    # torus strategies on square problems
+    peak_node_words: float
+    itt_bound: float
+    measured: bool
+    hlo_collective_bytes: Optional[float] = None
+
+
+def _fail(leg: str, msg: str):
+    raise ConformanceError(f"[{leg}] {msg}")
+
+
+def _is_torus_family(plan) -> bool:
+    return plan.torus is not None and plan.strategy != "cannon25d"
+
+
+def _ring_translation(perm, t: int) -> Optional[int]:
+    """Constant shift realized by a ring perm over Z_t, or None."""
+    perm = tuple(perm)
+    mu = None
+    for s, d in perm:
+        step = (int(d) - int(s)) % t
+        if mu is None:
+            mu = step
+        elif step != mu:
+            return None
+    if mu not in (None, 0) and len(perm) != t:
+        return None
+    return mu if mu is not None else 0
+
+
+def predicted_words_per_device(plan) -> float:
+    """The analytic cost model's per-device movement words for ``plan`` on
+    the padded problem.  Torus-family plans are priced from the schedule
+    itself (the Sec.-2.4 functional: each variable set whose movement
+    homomorphism is nonzero moves its block once per step); every standard
+    strategy is priced by ``dist.api.estimate``'s closed form -- ``check``
+    asserts the two derivations agree where both apply."""
+    from repro.dist.api import STRATEGIES, estimate
+
+    mp, np_, kp = padded_dims(plan)
+    p = int(plan.mesh.size) if plan.mesh is not None else 1
+    if plan.strategy == "local" or p <= 1:
+        return 0.0
+    if plan.torus is not None:
+        if plan.strategy == "cannon25d":
+            c, q, _ = plan.grid
+        else:
+            c, q = 1, plan.torus.q
+        blocks = {
+            "A": (mp // q) * (kp // (c * q)),
+            "B": (kp // (c * q)) * (np_ // q),
+            "C": (mp // q) * (np_ // q),
+        }
+        moves = plan.schedule.movements() if plan.schedule is not None else None
+        if moves is None:
+            _fail("structure", "torus plan without solvable movements")
+        words = sum(
+            (plan.torus.steps - 1) * blk
+            for var, blk in blocks.items()
+            if (moves[var][0] % q, moves[var][1] % q) != (0, 0)
+        )
+        if c > 1:
+            words += 2 * (c - 1) / c * blocks["C"]
+        return float(words)
+    if plan.strategy in STRATEGIES:
+        est = estimate(plan.strategy, mp, np_, kp, p, dtype_bytes=1,
+                       grid=plan.grid or None)
+        return float(est.comm_bytes)
+    _fail("cost", f"no analytic prediction for strategy {plan.strategy!r}")
+
+
+def memory_bound_words(plan) -> float:
+    """Per-node memory bound, derived from single-copy *shares* (padded
+    variable words / P) scaled by each variable's replication factor --
+    independent of the tracer's working-set accounting, which ``check``
+    compares against it.  Torus/ring families replicate nothing beyond the
+    plan's pod factor; the broadcast family (SUMMA/pod25d) holds each
+    operand gathered over one mesh axis and (pod25d) the full C partial
+    per layer -- that IS its replication, and the bound prices it."""
+    mp, np_, kp = padded_dims(plan)
+    p = int(plan.mesh.size) if plan.mesh is not None else 1
+    share_a = mp * kp / max(p, 1)
+    share_b = kp * np_ / max(p, 1)
+    share_c = mp * np_ / max(p, 1)
+    if plan.strategy in ("summa", "pod25d"):
+        if len(plan.grid) >= 3:
+            c, qx, qy = plan.grid
+        elif plan.strategy == "pod25d":
+            c, qx, qy = plan.grid[0], 1, 1
+        else:
+            c, (qx, qy) = 1, plan.grid
+        return float(qy * share_a + qx * share_b + c * share_c)
+    if plan.strategy == "ring_ag":
+        # fused: only one x-chunk resident per step -- true single copy
+        return float(share_a + share_b + share_c)
+    if plan.strategy == "ring_rs":
+        # the full (m, n) partial product is resident before the scatter:
+        # t-fold replication of C
+        t = plan.grid[0] if plan.grid else p
+        return float(share_a + share_b + t * share_c)
+    return float(max(plan.replication, 1)) * (share_a + share_b + share_c)
+
+
+def compare_records(expected: Sequence[CollectiveRecord],
+                    measured: Sequence[CollectiveRecord]) -> None:
+    """Exact multiset equality of collective records (phase annotations
+    excluded); raises ``ConformanceError`` listing the divergence with
+    multiplicities (so a dropped round of an otherwise-identical permute
+    still names the key)."""
+    from collections import Counter
+
+    exp = Counter(r.key for r in expected)
+    got = Counter(r.key for r in measured)
+    if exp == got:
+        return
+    exp_only = sorted((exp - got).items())
+    got_only = sorted((got - exp).items())
+    _fail("interceptor",
+          "executed collectives diverge from the schedule trace; "
+          f"trace-only={exp_only[:3]!r} executed-only={got_only[:3]!r} "
+          f"(trace {sum(exp.values())} records, "
+          f"executed {sum(got.values())})")
+
+
+def _check_structure(plan, trace: Trace) -> None:
+    # movement vectors the *program* realizes, recovered from its perms --
+    # a stationary variable has no movement record and contributes mu = 0
+    executed_mus = {"A": (0, 0), "B": (0, 0), "C": (0, 0)}
+    for rec in trace.records:
+        if rec.kind != "ppermute":
+            continue
+        if not perm_is_bijection(rec.perm, rec.group):
+            _fail("structure",
+                  f"{rec.phase or 'executed'} perm for {rec.var or '?'} is "
+                  f"not a bijection on {rec.group} devices")
+        if rec.phase == "movement":
+            if plan.torus is not None:
+                q = math.isqrt(rec.group)
+                mu = perm_translation(rec.perm, q)
+                if mu is None:
+                    _fail("structure",
+                          f"movement perm for {rec.var} is not a torus "
+                          "translation: the movement homomorphism does not "
+                          "commute with the torus action")
+                if rec.var:
+                    executed_mus[rec.var] = mu
+            elif plan.strategy in ("ring_ag", "ring_rs"):
+                if _ring_translation(rec.perm, rec.group) is None:
+                    _fail("structure",
+                          f"ring perm for {rec.var} is not a Z_t translation")
+    if plan.schedule is not None and plan.torus is not None:
+        # Fig.-10 equations against the executed mus (discriminating form:
+        # a wrong-but-valid translation fails the diagram here)
+        if not movement_equations_hold(plan.schedule, executed_mus):
+            _fail("structure",
+                  "Fig.-10 movement equations do not hold for the executed "
+                  f"movement vectors {executed_mus}")
+        from repro.plan.ir import TorusProgram
+
+        if plan.torus != TorusProgram.from_schedule(plan.schedule):
+            _fail("structure",
+                  "reified TorusProgram does not match the plan's schedule "
+                  "(wrong-permutation mutation?)")
+        if not torus_single_copy_ok(plan.schedule):
+            _fail("structure", "per-step single-copy memory bound violated")
+
+
+def _check_cost(plan, trace: Trace) -> Tuple[float, Optional[float], float]:
+    p = trace.mesh_size
+    words_node = trace.movement_words() / p
+    predicted = predicted_words_per_device(plan)
+    if not math.isclose(words_node, predicted, rel_tol=1e-9, abs_tol=1e-6):
+        _fail("cost",
+              f"trace movement words/node {words_node} != analytic "
+              f"prediction {predicted} for {plan.strategy}")
+
+    link_words = None
+    mp, np_, kp = trace.padded
+    if _is_torus_family(plan) and plan.schedule is not None \
+            and mp == np_ == kp:
+        q = plan.torus.q
+        link_words = trace.link_words(q)
+        report = torus_schedule_cost(plan.schedule, mp)
+        if not math.isclose(link_words, report.words_total,
+                            rel_tol=1e-9, abs_tol=1e-6):
+            _fail("cost",
+                  f"trace link-words {link_words} != torus_schedule_cost "
+                  f"{report.words_total} (hop counts diverge)")
+
+    bound = memory_bound_words(plan)
+    if trace.peak_node_words > bound + 1e-6:
+        _fail("memory",
+              f"peak per-node words {trace.peak_node_words} exceed "
+              f"replication bound {bound}")
+
+    n_eff = (mp * np_ * kp) ** (1.0 / 3.0)
+    itt = bandwidth_lower_bound(n_eff, p, max(trace.peak_node_words, 1.0))
+    if words_node + 1e-6 < itt:
+        _fail("bound",
+              f"measured {words_node} words/node beat the Irony-Toledo-"
+              f"Tiskin bound {itt} -- the count is wrong")
+    return words_node, link_words, itt
+
+
+def hlo_collective_bytes(plan, dtype=None) -> float:
+    """Third measurement modality: compile the plan under jit and sum the
+    collective bytes ``repro.roofline.hlo_stats`` sees in the optimized
+    HLO.  XLA may fuse or re-associate collectives, so this leg checks
+    presence/absence, not exact counts."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.plan.lower_shard_map import _lower_shard_map
+    from repro.roofline import hlo_stats
+
+    dtype = dtype if dtype is not None else plan.out_dtype
+    flat_m = plan.m * math.prod(plan.batch) if plan.batch else plan.m
+    a = jnp.zeros((flat_m, plan.k), dtype)
+    b = jnp.zeros((plan.k, plan.n), dtype)
+    txt = jax.jit(_lower_shard_map(plan)).lower(a, b).compile().as_text()
+    return hlo_stats.analyze(txt).coll_bytes
+
+
+def check(plan, *, measure: bool = False, hlo: bool = False) -> ConformanceReport:
+    """Full conformance of ``plan``: structure, cost model, and (optionally)
+    the executed collectives and compiled HLO.  Raises ``ConformanceError``
+    on the first broken leg; returns the report otherwise."""
+    trace = trace_plan(plan)
+    _check_structure(plan, trace)
+    words_node, link_words, itt = _check_cost(plan, trace)
+
+    if measure:
+        from .interceptor import measure_plan
+
+        cap = measure_plan(plan)
+        if not any(p_ is plan for p_ in cap.lowered_plans):
+            _fail("interceptor", "lowering hook did not see the plan")
+        compare_records(trace.records, cap.records)
+
+    hlo_bytes = None
+    if hlo:
+        hlo_bytes = hlo_collective_bytes(plan)
+        if (hlo_bytes > 0) != (trace.words_total() > 0):
+            _fail("hlo",
+                  f"compiled HLO collective bytes {hlo_bytes} inconsistent "
+                  f"with trace words {trace.words_total()}")
+
+    return ConformanceReport(
+        strategy=plan.strategy, mesh_size=trace.mesh_size, grid=trace.grid,
+        padded=trace.padded, words_per_node=words_node,
+        link_words=link_words, peak_node_words=trace.peak_node_words,
+        itt_bound=itt, measured=measure, hlo_collective_bytes=hlo_bytes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The conformance matrix: strategy x mesh shape x case x dtype
+# ---------------------------------------------------------------------------
+
+_CATALOG: Tuple[Tuple[str, Tuple[int, ...], Tuple[str, ...]], ...] = (
+    ("cannon", (2, 2), ("x", "y")),
+    ("cannon", (3, 3), ("x", "y")),
+    ("cannon", (4, 4), ("x", "y")),
+    ("summa", (2, 2), ("x", "y")),
+    ("summa", (2, 4), ("x", "y")),
+    ("summa", (4, 4), ("x", "y")),
+    ("pod25d", (4,), ("pod",)),
+    ("pod25d", (2, 2, 2), ("pod", "x", "y")),
+    ("pod25d", (2, 2, 4), ("pod", "x", "y")),
+    ("cannon25d", (1, 2, 2), ("pod", "x", "y")),
+    ("cannon25d", (2, 2, 2), ("pod", "x", "y")),
+    ("cannon25d", (4, 2, 2), ("pod", "x", "y")),
+    ("ring_ag", (4,), ("t",)),
+    ("ring_ag", (2, 2), ("x", "y")),
+    ("ring_ag", (8,), ("t",)),
+    ("ring_rs", (4,), ("t",)),
+    ("ring_rs", (2, 2), ("x", "y")),
+    ("ring_rs", (8,), ("t",)),
+)
+
+CASES: Dict[str, Dict] = {
+    "square": {"m": 24, "n": 24, "k": 24, "batch": ()},
+    "ragged": {"m": 13, "n": 7, "k": 11, "batch": ()},
+    "batched": {"m": 5, "n": 8, "k": 12, "batch": (3,)},
+}
+
+
+def matrix_cells(num_devices: int):
+    """Catalog entries executable with ``num_devices`` devices."""
+    return [c for c in _CATALOG if math.prod(c[1]) <= num_devices]
+
+
+def run_matrix(*, measure: bool = True, cases: Optional[Sequence[str]] = None,
+               dtypes: Optional[Sequence] = None,
+               num_devices: Optional[int] = None) -> List[Dict]:
+    """Run the conformance matrix on the available devices; one result row
+    per (strategy, mesh shape, case, dtype) cell.  Never raises -- failures
+    are rows with ``ok=False`` so a sweep reports every broken cell."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.plan import build_plan
+
+    devs = np.array(jax.devices())
+    num_devices = len(devs) if num_devices is None else num_devices
+    cases = tuple(cases) if cases is not None else tuple(CASES)
+    dtypes = tuple(dtypes) if dtypes is not None else (jnp.float32,
+                                                       jnp.bfloat16)
+    rows: List[Dict] = []
+    meshes: Dict[Tuple, object] = {}
+    for strategy, shape, names in matrix_cells(num_devices):
+        for case in cases:
+            spec = CASES[case]
+            for dtype in dtypes:
+                row = {"strategy": strategy, "mesh": shape, "case": case,
+                       "dtype": jnp.dtype(dtype).name, "ok": True,
+                       "error": "", "words_per_node": 0.0}
+                try:
+                    key = (shape, names)
+                    if key not in meshes:
+                        meshes[key] = jax.make_mesh(
+                            shape, names, devices=devs[:math.prod(shape)])
+                    plan = build_plan(
+                        spec["m"], spec["n"], spec["k"], mesh=meshes[key],
+                        strategy=strategy, batch=spec["batch"],
+                        a_dtype=dtype, b_dtype=dtype,
+                    )
+                    rep = check(plan, measure=measure)
+                    row["words_per_node"] = rep.words_per_node
+                except Exception as e:  # noqa: BLE001 -- matrix reports all
+                    row["ok"] = False
+                    row["error"] = f"{type(e).__name__}: {e}"
+                rows.append(row)
+    return rows

@@ -1,0 +1,112 @@
+"""Counting interceptor for the real execution path.
+
+``intercept()`` monkeypatches the ``repro.dist._collectives`` seam (the
+single choke point every dist lowering rule's ppermute / all_gather / psum
+goes through) and records one ``CollectiveRecord`` per collective the
+shard_map body emits -- shapes and permutations captured at trace time, so
+a single run of the lowered program yields the exact per-program collective
+multiset regardless of how XLA later fuses or schedules it.
+
+``measure_plan`` is the entry point conformance uses: it lowers ``plan``
+through the real (uncached) lowering on its real mesh -- forced-host
+multi-device CPU meshes in tests -- runs it once on zero operands, and
+returns the captured records plus the plan identity confirmed through the
+``repro.plan.on_lower`` hook.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import List
+
+from .trace import CollectiveRecord, canonical_perm
+
+
+@dataclasses.dataclass
+class Capture:
+    """Mutable record sink handed out by ``intercept``."""
+
+    records: List[CollectiveRecord] = dataclasses.field(default_factory=list)
+    lowered_plans: List = dataclasses.field(default_factory=list)
+
+    def add(self, rec: CollectiveRecord) -> None:
+        self.records.append(rec)
+
+
+def _axis_group(axis_name) -> int:
+    """Static size of the named-axis group a collective runs over; the
+    ``psum(1, axis)`` idiom is concrete under shard_map tracing."""
+    from jax import lax
+
+    return int(lax.psum(1, axis_name))
+
+
+def _shard_words(x) -> int:
+    return int(math.prod(x.shape)) if getattr(x, "shape", None) else 1
+
+
+@contextlib.contextmanager
+def intercept():
+    """Patch the dist collective seam; yields a ``Capture`` that fills with
+    one record per collective traced while the context is active."""
+    from repro.dist import _collectives as seam
+    from repro.plan.lower_shard_map import on_lower
+
+    cap = Capture()
+    orig_ppermute = seam.ppermute
+    orig_all_gather = seam.all_gather
+    orig_psum = seam.psum
+
+    def ppermute(x, axis_name, perm):
+        cap.add(CollectiveRecord("ppermute", _axis_group(axis_name),
+                                 _shard_words(x), canonical_perm(perm)))
+        return orig_ppermute(x, axis_name, perm)
+
+    def all_gather(x, axis_name, *, axis, tiled):
+        cap.add(CollectiveRecord("all_gather", _axis_group(axis_name),
+                                 _shard_words(x)))
+        return orig_all_gather(x, axis_name, axis=axis, tiled=tiled)
+
+    def psum(x, axis_name):
+        cap.add(CollectiveRecord("psum", _axis_group(axis_name),
+                                 _shard_words(x)))
+        return orig_psum(x, axis_name)
+
+    seam.ppermute, seam.all_gather, seam.psum = ppermute, all_gather, psum
+    remove = on_lower(cap.lowered_plans.append)
+    try:
+        yield cap
+    finally:
+        remove()
+        seam.ppermute = orig_ppermute
+        seam.all_gather = orig_all_gather
+        seam.psum = orig_psum
+
+
+def measure_plan(plan, dtype=None) -> Capture:
+    """Execute ``plan``'s real shard_map lowering once on zero operands of
+    the folded 2-D problem and return the captured collective records.
+
+    Exercises the genuine public ``lower_shard_map`` for the ``on_lower``
+    hook wiring, then *executes* a freshly built (uncached) lowering: the
+    body closures must be new objects so shard_map re-traces them under
+    the active interceptor -- a closure memoized by an earlier lowering may
+    already be traced and would emit nothing -- without evicting other
+    plans' cached closures.  Operands default to the plan's ``out_dtype``
+    so dtype-conditioned lowering paths are the ones measured.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.plan.lower_shard_map import _lower_shard_map, lower_shard_map
+
+    dtype = dtype if dtype is not None else plan.out_dtype
+    flat_m = plan.m * math.prod(plan.batch) if plan.batch else plan.m
+    a = jnp.zeros((flat_m, plan.k), dtype)
+    b = jnp.zeros((plan.k, plan.n), dtype)
+    with intercept() as cap:
+        lower_shard_map(plan)  # public path: fires the on_lower hook
+        out = _lower_shard_map(plan)(a, b)
+        jax.block_until_ready(out)
+    return cap

@@ -9,6 +9,8 @@ package is the declared dev-dependency and wins when present).
 import os
 import sys
 
+import pytest
+
 _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                     "src")
 if _SRC not in sys.path:
@@ -20,3 +22,14 @@ except ImportError:
     from repro._hypothesis_stub import install
 
     install()
+
+
+@pytest.fixture(autouse=True)
+def _reset_plan_cache():
+    """Isolate the process-global plan cache between tests: entries AND
+    hit/miss counters start fresh, so cache-stats assertions (test_plan)
+    cannot couple to whichever test planned first."""
+    from repro.plan import cache_clear
+
+    cache_clear()
+    yield

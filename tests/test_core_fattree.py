@@ -1,0 +1,84 @@
+"""Direct unit tests for core.fattree (Sec. 4.2 wreath-product schedules).
+
+Previously exercised only indirectly via test_core_groups; these pin the
+schedule's validity, position functions, hop/link accounting, and boundary
+sizes level by level.
+"""
+import pytest
+
+from repro.core.fattree import FatTreeSchedule
+
+
+@pytest.mark.parametrize("d", [1, 2, 3])
+class TestScheduleValidity:
+    def test_boundary_sizes(self, d):
+        ft = FatTreeSchedule(d=d)
+        assert ft.n == 2 ** d
+        assert ft.num_procs == 4 ** d
+        assert ft.num_steps == 2 ** d
+        # n^3 instructions fill the (proc, time) grid exactly
+        assert ft.n ** 3 == ft.num_procs * ft.num_steps
+
+    def test_f_is_a_bijection_onto_proc_time(self, d):
+        ft = FatTreeSchedule(d=d)
+        n = ft.n
+        cells = {ft.f(i, j, k)
+                 for i in range(n) for j in range(n) for k in range(n)}
+        assert len(cells) == n ** 3
+        assert ft.validate()
+
+    def test_positions_consistent_with_f(self, d):
+        """pos_A/pos_B invert f's time bits: the processor executing
+        (i, j, k) at step t holds A_ij and B_jk at that step."""
+        ft = FatTreeSchedule(d=d)
+        n = ft.n
+        for i in range(n):
+            for j in range(n):
+                for k in range(n):
+                    proc, time = ft.f(i, j, k)
+                    assert ft.pos_A(i, j, time) == proc
+                    assert ft.pos_B(j, k, time) == proc
+                    assert ft.pos_C(k, i) == proc
+
+    def test_c_layout_is_a_bijection(self, d):
+        """C stationary, one element per processor (3-words memory)."""
+        ft = FatTreeSchedule(d=d)
+        n = ft.n
+        procs = {ft.pos_C(k, i) for k in range(n) for i in range(n)}
+        assert procs == set(range(ft.num_procs))
+
+
+class TestHopCounts:
+    def test_base_case_fig11_traffic(self):
+        """d=1 (Fig. 11): 4 words of A over the top link (8 words x links
+        counting both transits), 16 words x links over the leaf level."""
+        ft = FatTreeSchedule(d=1)
+        assert ft.link_traffic() == {1: 16, 2: 8}
+        assert ft.top_level_words() == 4 == ft.n ** 2
+
+    @pytest.mark.parametrize("d", [1, 2, 3])
+    def test_top_level_words_is_n_squared(self, d):
+        """The paper's Sec.-4.2 claim: only A crosses the root, n^2 words
+        over the whole run."""
+        ft = FatTreeSchedule(d=d)
+        assert ft.top_level_words() == ft.n ** 2
+
+    @pytest.mark.parametrize("d", [2, 3])
+    def test_traffic_decreases_up_the_tree(self, d):
+        """Words x links shrink strictly toward the root -- the recursion
+        localizes most movement to the lower levels."""
+        traffic = FatTreeSchedule(d=d).link_traffic()
+        levels = sorted(traffic)
+        for lo, hi in zip(levels, levels[1:]):
+            assert traffic[lo] > traffic[hi] > 0
+
+    def test_a_moves_every_step_b_moves_low_bits(self):
+        """Level structure of the base case: A's position flips its high
+        bit every step, B its low bit."""
+        ft = FatTreeSchedule(d=1)
+        for a in range(2):
+            for b in range(2):
+                pa = [ft.pos_A(a, b, t) for t in range(2)]
+                pb = [ft.pos_B(a, b, t) for t in range(2)]
+                assert pa[0] ^ pa[1] == 0b10  # top-level crossing
+                assert pb[0] ^ pb[1] == 0b01  # leaf-level crossing

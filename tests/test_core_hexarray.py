@@ -1,0 +1,90 @@
+"""Direct unit tests for core.hexarray (Sec. D.2 systolic schedule).
+
+Pin the schedule's validity (one MAC per node per step), hop counts
+(every stream moves exactly one lattice link per step, in its fixed
+direction), and boundary sizes (the active region is the hexagon of side
+q; the wavefront spans 3q - 2 steps).
+"""
+import numpy as np
+import pytest
+
+from repro.core.groups import HexLattice
+from repro.core.hexarray import HexSchedule
+from repro.verify import trace_hex
+from repro.verify.trace import hex_element_positions
+
+
+@pytest.mark.parametrize("q", [1, 2, 3, 5])
+class TestValidity:
+    def test_one_mac_per_node_per_step(self, q):
+        hs = HexSchedule(q=q)
+        cells = {}
+        for i in range(q):
+            for j in range(q):
+                for k in range(q):
+                    key = hs.f(i, j, k)
+                    assert key not in cells, "two MACs on one node/step"
+                    cells[key] = (i, j, k)
+        assert len(cells) == q ** 3
+
+    def test_boundary_sizes(self, q):
+        """Active nodes form the hexagon of side q: 3q^2 - 3q + 1 cells;
+        completion takes 3q - 2 steps."""
+        hs = HexSchedule(q=q)
+        nodes = {hs.f(i, j, k)[0]
+                 for i in range(q) for j in range(q) for k in range(q)}
+        assert len(nodes) == 3 * q * q - 3 * q + 1
+        assert hs.num_steps == 3 * q - 2
+        times = {hs.f(i, j, k)[1]
+                 for i in range(q) for j in range(q) for k in range(q)}
+        assert times == set(range(3 * q - 2))
+
+
+@pytest.mark.parametrize("q", [2, 3, 4])
+class TestHopCounts:
+    def test_movement_vectors_are_single_links(self, q):
+        hs = HexSchedule(q=q)
+        lat = HexLattice()
+        mv = hs.movement_vectors()
+        assert set(mv) == {"A", "B", "C"}
+        for vec in mv.values():
+            assert lat.link_hops(vec) == 1
+
+    def test_streams_move_by_their_vector_every_step(self, q):
+        """Kung's direction/speed/timing: each element's per-step hop is
+        exactly its stream's movement vector (one link, fixed direction)."""
+        hs = HexSchedule(q=q)
+        mv = hs.movement_vectors()
+        for var in ("A", "B", "C"):
+            for r in range(q):
+                for s in range(q):
+                    path = hex_element_positions(hs, var, r, s)
+                    for (t0, n0), (t1, n1) in zip(path, path[1:]):
+                        assert t1 == t0 + 1
+                        assert (n1[0] - n0[0], n1[1] - n0[1]) == mv[var]
+
+    def test_trace_counts_q_minus_1_hops_per_element(self, q):
+        tr = trace_hex(HexSchedule(q=q))
+        assert tr.words_total() == 3 * q * q * (q - 1)
+        assert tr.num_steps == 3 * q - 2
+
+
+class TestSimulation:
+    @pytest.mark.parametrize("q", [1, 3, 6])
+    def test_simulate_matches_reference(self, q):
+        rng = np.random.default_rng(0)
+        A, B = rng.normal(size=(q, q)), rng.normal(size=(q, q))
+        hs = HexSchedule(q=q)
+        np.testing.assert_allclose(hs.simulate(A, B), hs.reference(A, B),
+                                   rtol=1e-12, atol=1e-12)
+
+    def test_simulate_integer_exact(self):
+        q = 4
+        rng = np.random.default_rng(1)
+        A = rng.integers(-5, 5, size=(q, q))
+        B = rng.integers(-5, 5, size=(q, q))
+        hs = HexSchedule(q=q)
+        assert np.array_equal(hs.simulate(A, B), (A @ B).T)
+
+    def test_systolic_properties_all_hold(self):
+        assert all(HexSchedule(q=7).systolic_properties().values())

@@ -4,7 +4,11 @@ import math
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.schedule import Torus25DSchedule, TorusSchedule, torus_hops
+from repro.core.cost import (bandwidth_lower_bound,
+                             memory_independent_lower_bound,
+                             schedule_25d_cost, torus_schedule_cost)
+from repro.core.schedule import (Torus25DSchedule, TorusSchedule,
+                                 cannon_schedule, torus_hops)
 from repro.core.zorder import zorder_schedule
 from repro.dist.api import estimate
 from repro.layers.embed import padded_vocab
@@ -79,6 +83,45 @@ def test_zorder_is_permutation(g):
 def test_padded_vocab_properties(v):
     p = padded_vocab(v)
     assert p >= v and p % 256 == 0 and p - v < 256
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    q=st.sampled_from([2, 3, 4, 6, 8, 12, 16]),
+    mult=st.integers(1, 64),
+)
+def test_torus_cost_never_beats_lower_bounds(q, mult):
+    """The paper's schedules are feasible, so their analytic word counts
+    must sit at or above the Irony-Toledo-Tiskin bandwidth bound (at the
+    schedule's own 3-blocks-per-node memory) and the memory-independent
+    bound, for every (n, q)."""
+    n = q * mult
+    rep = torus_schedule_cost(cannon_schedule(q), n)
+    p = q * q
+    M = 3.0 * (n / q) ** 2
+    assert rep.words_per_node >= bandwidth_lower_bound(n, p, M) - 1e-9
+    assert rep.words_per_node >= memory_independent_lower_bound(n, p) - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    q=st.sampled_from([2, 4, 6, 8, 12, 16]),
+    c=st.sampled_from([1, 2, 3, 4]),
+    mult=st.integers(1, 32),
+)
+def test_25d_cost_never_beats_lower_bounds(q, c, mult):
+    """Replication (the Sec.-2.5 memory-for-communication trade) lowers the
+    words but raises M -- the ITT bound moves with it and is never beaten,
+    nor is the memory-independent floor, across random (n, q, c)."""
+    if q % c:
+        return
+    n = q * mult
+    sched = Torus25DSchedule(q=q, c=c)
+    rep = schedule_25d_cost(sched, n)
+    p = q * q * c
+    M = 3.0 * c * (n / q) ** 2  # c-fold replicated blocks per node
+    assert rep.words_per_node >= bandwidth_lower_bound(n, p, M) - 1e-9
+    assert rep.words_per_node >= memory_independent_lower_bound(n, p) - 1e-9
 
 
 @settings(max_examples=30, deadline=None)

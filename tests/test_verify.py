@@ -1,0 +1,205 @@
+"""Pure (no-device) tests of the repro.verify trace/conformance subsystem.
+
+The measured leg (interceptor vs. real shard_map programs) lives in
+tests/test_conformance.py's subprocess; everything here runs on fake
+planner meshes and the algebra alone.
+"""
+import dataclasses
+import math
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import (cannon_schedule, movement_equations_hold,
+                        perm_is_bijection, perm_link_words, perm_translation)
+from repro.core.cost import torus_schedule_cost
+from repro.core.fattree import FatTreeSchedule
+from repro.core.hexarray import HexSchedule
+from repro.plan import build_plan
+from repro.verify import (ConformanceError, check, compare_records,
+                          fattree_level_words, predicted_words_per_device,
+                          trace_fattree, trace_hex, trace_plan)
+from repro.verify.trace import CollectiveRecord, padded_dims
+
+
+def fake_mesh(sizes, names):
+    total = math.prod(sizes)
+    return SimpleNamespace(
+        axis_names=tuple(names),
+        shape=dict(zip(names, sizes)),
+        size=total,
+        devices=np.array([SimpleNamespace(id=i, platform="cpu")
+                          for i in range(total)]),
+    )
+
+
+STRATEGY_MESHES = [
+    ("cannon", (3, 3), ("x", "y")),
+    ("summa", (2, 4), ("x", "y")),
+    ("pod25d", (4,), ("pod",)),
+    ("pod25d", (2, 2, 2), ("pod", "x", "y")),
+    ("cannon25d", (2, 2, 2), ("pod", "x", "y")),
+    ("ring_ag", (4,), ("t",)),
+    ("ring_rs", (2, 2), ("x", "y")),
+]
+
+
+# ---------------------------------------------------------------------------
+# core predicates
+# ---------------------------------------------------------------------------
+
+
+def test_perm_predicates():
+    q = 3
+    sched = cannon_schedule(q)
+    step_a = sched.movement_perm("A")
+    assert perm_is_bijection(step_a, q * q)
+    assert perm_translation(step_a, q) == sched.movement("A")
+    # a swapped destination is neither a translation nor (here) a bijection
+    bad = list(step_a)
+    bad[0] = (bad[0][0], bad[1][1])
+    assert perm_translation(bad, q) is None
+    assert not perm_is_bijection(bad, q * q)
+    assert movement_equations_hold(sched)
+
+
+def test_perm_link_words_matches_hops():
+    q = 4
+    sched = cannon_schedule(q)
+    # one-hop translation over q^2 blocks of 5 words: q^2 * 5 link-words
+    assert perm_link_words(sched.movement_perm("A"), q, 5.0) == q * q * 5.0
+    # stationary C: zero link-words
+    assert perm_link_words(sched.movement_perm("C"), q, 5.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# trace == cost model on every strategy (the no-device legs of check)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy,shape,names", STRATEGY_MESHES)
+def test_check_passes_on_planned_strategies(strategy, shape, names):
+    plan = build_plan(24, 24, 24, mesh=fake_mesh(shape, names),
+                      strategy=strategy)
+    rep = check(plan)
+    assert rep.words_per_node == pytest.approx(
+        predicted_words_per_device(plan))
+    assert rep.strategy == strategy
+
+
+@pytest.mark.parametrize("case", [(13, 7, 11, ()), (5, 8, 12, (3,))])
+@pytest.mark.parametrize("strategy,shape,names", STRATEGY_MESHES)
+def test_check_passes_ragged_and_batched(strategy, shape, names, case):
+    m, n, k, batch = case
+    plan = build_plan(m, n, k, mesh=fake_mesh(shape, names),
+                      strategy=strategy, batch=batch)
+    check(plan)
+
+
+def test_trace_cannon_structure():
+    q = 3
+    plan = build_plan(30, 30, 30, mesh=fake_mesh((q, q), ("x", "y")),
+                      strategy="cannon")
+    tr = trace_plan(plan)
+    # 2 skews + (q-1) steps x {A, B} (C stationary), no collection
+    assert tr.counts() == {"ppermute": 2 + 2 * (q - 1)}
+    phases = [r.phase for r in tr.records]
+    assert phases.count("placement") == 2
+    assert phases.count("movement") == 2 * (q - 1)
+    assert phases.count("collection") == 0
+    # movement words: A and B move one block per node per step
+    blk = (30 // q) * (30 // q)
+    assert tr.movement_words() == 2 * (q - 1) * blk * q * q
+
+
+def test_trace_link_words_equal_paper_cost():
+    """The trace's link-word count IS torus_schedule_cost's word count --
+    the Sec.-2.4 functional evaluated on the executed program."""
+    q, n = 4, 32
+    plan = build_plan(n, n, n, mesh=fake_mesh((q, q), ("x", "y")),
+                      strategy="cannon")
+    tr = trace_plan(plan)
+    assert tr.link_words(q) == torus_schedule_cost(cannon_schedule(q),
+                                                   n).words_total
+
+
+def test_padded_dims_fold_batch_and_ragged():
+    plan = build_plan(5, 7, 11, mesh=fake_mesh((3, 3), ("x", "y")),
+                      strategy="cannon", batch=(4,))
+    assert padded_dims(plan) == (21, 9, 12)  # 20 rows -> 21, 7 -> 9, 11 -> 12
+
+
+# ---------------------------------------------------------------------------
+# mutations are caught
+# ---------------------------------------------------------------------------
+
+
+def _cannon_plan(q=3, n=24):
+    return build_plan(n, n, n, mesh=fake_mesh((q, q), ("x", "y")),
+                      strategy="cannon")
+
+
+def test_wrong_permutation_mutation_caught():
+    plan = _cannon_plan()
+    pairs = list(plan.torus.step_a)
+    pairs[0], pairs[1] = (pairs[0][0], pairs[1][1]), (pairs[1][0], pairs[0][1])
+    bad = dataclasses.replace(
+        plan, torus=dataclasses.replace(plan.torus, step_a=tuple(pairs)))
+    with pytest.raises(ConformanceError):
+        check(bad)
+
+
+def test_wrong_translation_mutation_caught():
+    """Still a bijective translation -- but not the schedule's mu."""
+    plan = _cannon_plan()
+    q = plan.torus.q
+    wrong = tuple((x * q + y, ((x + 1) % q) * q + y)
+                  for x in range(q) for y in range(q))
+    bad = dataclasses.replace(
+        plan, torus=dataclasses.replace(plan.torus, step_b=wrong))
+    with pytest.raises(ConformanceError):
+        check(bad)
+
+
+def test_compare_records_catches_divergence():
+    plan = _cannon_plan()
+    recs = list(trace_plan(plan).records)
+    tampered = recs[:-1] + [dataclasses.replace(recs[-1],
+                                                shard_words=recs[-1].shard_words + 1)]
+    with pytest.raises(ConformanceError):
+        compare_records(recs, tampered)
+    compare_records(recs, list(reversed(recs)))  # order-insensitive
+
+
+def test_collective_record_word_conventions():
+    pp = CollectiveRecord("ppermute", 4, 10, ((0, 1), (1, 2), (2, 3), (3, 0)))
+    assert pp.words_total(4) == 40          # one shard per pair
+    assert pp.words_total(8) == 80          # two independent ring copies
+    ag = CollectiveRecord("all_gather", 4, 10)
+    assert ag.words_total(4) == 120         # each device receives g-1 shards
+    ps = CollectiveRecord("psum", 4, 10)
+    assert ps.words_total(4) == 60          # 2(g-1) shards per group
+
+
+# ---------------------------------------------------------------------------
+# machine-model traces: fat-tree and hex array
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [1, 2])
+def test_fattree_trace_matches_link_traffic_oracle(d):
+    ft = FatTreeSchedule(d=d)
+    tr = trace_fattree(ft)
+    assert fattree_level_words(tr, d) == ft.link_traffic()
+    # the paper's top-link claim through the trace: n^2 words of A
+    top = fattree_level_words(tr, d)[2 * d] // 2
+    assert top == ft.n ** 2 == ft.top_level_words()
+
+
+def test_hex_trace_one_link_per_step():
+    hs = HexSchedule(q=4)
+    tr = trace_hex(hs)
+    # every element of every stream moves q-1 times
+    assert len(tr.events) == 3 * hs.q * hs.q * (hs.q - 1)
+    assert tr.words_total() == len(tr.events)
