@@ -1,6 +1,10 @@
 """One benchmark per paper table/figure.  Each returns (name, us_per_call,
 derived) rows for the CSV emitted by benchmarks.run.
 
+``us_per_call`` is ``None`` for derived-only benches (pure model
+evaluations with no timed call) -- the driver emits an empty CSV field and
+``"us_per_call": null`` in the JSON, never a fake ``0.0``.
+
 Multi-device benches (collective-byte measurements) run in a subprocess
 with fake devices so the parent process keeps the default 1-device view.
 """
@@ -11,11 +15,11 @@ import os
 import subprocess
 import sys
 import time
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-Row = Tuple[str, float, str]
+Row = Tuple[str, Optional[float], str]
 
 
 def _timeit(fn, reps: int = 3) -> float:
@@ -139,7 +143,7 @@ def bench_spacebounded() -> List[Row]:
         tz = block_reuse_distance_traffic(z, cache)
         tr = block_reuse_distance_traffic(r, cache)
         rows.append((
-            f"zorder_traffic_M{cache}", 0.0,
+            f"zorder_traffic_M{cache}", None,
             f"zorder={tz};rowmajor={tr};saving={tr/tz:.2f}x",
         ))
     us = _timeit(lambda: zorder_schedule(g, g, g), reps=1)
@@ -178,7 +182,7 @@ def bench_lowerbound() -> List[Row]:
     per_node = cannon_comm_total(n, p) / p
     lb = max(bandwidth_lower_bound(n, p, M), memory_independent_lower_bound(n, p))
     return [(
-        "lowerbound_gap_n8192_p64", 0.0,
+        "lowerbound_gap_n8192_p64", None,
         f"cannon_per_node={per_node:.3e};bound={lb:.3e};"
         f"factor_above_bound={per_node/lb:.2f}",
     )]
@@ -240,7 +244,7 @@ def bench_strategy_choice() -> List[Row]:
     xla = estimate("xla_ag", m, n, k, tp)
     ring = estimate("ring_ag", m, n, k, tp)
     rows.append((
-        "strategy_autoselect", 0.0,
+        "strategy_autoselect", None,
         f"choice={best};xla_total={xla.total_s:.2e};ring_total={ring.total_s:.2e};"
         f"overlap_speedup={xla.total_s/ring.total_s:.2f}x",
     ))

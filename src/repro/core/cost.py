@@ -119,6 +119,27 @@ VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB v5e vector memory
 MXU_DIM = 128             # systolic array tile edge
 
 
+def calibrated_total_s(flops: float, comm_bytes: float, msgs: float, *,
+                       alpha_s: float, bw_bytes_per_s: float,
+                       peak_flops: float, overlapped: bool) -> float:
+    """Calibrated seconds for one strategy cell: the analytic word/message
+    counts priced with *measured* machine parameters (a fitted
+    ``repro.obs.profile.MachineProfile``) instead of the datasheet
+    constants above.
+
+    ``msgs`` is the strategy's collective-round count (the latency term the
+    α–β model adds over the pure-bandwidth analytic model): compute is
+    ``flops / peak_flops``, communication ``msgs * α + bytes / bw``, and
+    the two combine under the strategy's own overlap rule -- exactly the
+    ``Estimate.total_s`` shape, with calibrated coefficients.  With α = 0
+    and the datasheet bw/flops this reproduces the analytic ranking
+    (``repro.obs.default_profile`` pins that identity).
+    """
+    compute_s = flops / max(peak_flops, 1e-9)
+    comm_s = msgs * alpha_s + comm_bytes / max(bw_bytes_per_s, 1e-9)
+    return max(compute_s, comm_s) if overlapped else compute_s + comm_s
+
+
 def matmul_time_model(m: int, n: int, k: int, dtype_bytes: int = 2) -> Dict[str, float]:
     """Single-chip roofline terms for an (m,k)x(k,n) matmul."""
     flops = 2.0 * m * n * k

@@ -6,6 +6,15 @@ wrappers; they are plain pass-throughs to ``jax.lax`` in production.
 to count the collectives a shard_map body actually emits -- the measured
 leg of the trace == interceptor == cost-model conformance triangle.
 
+When ``repro.obs`` tracing is enabled, each call additionally records one
+``CollectiveEvent`` (kind, axis-group size, shard words, canonical perm,
+ambient strategy tag) in the obs recorder and bumps the per-kind metrics
+counters -- the same key shape the verify interceptor captures, so
+``obs.collective_multiset()`` must equal the interceptor's multiset
+exactly (the drift check asserts it).  Because the interceptor patches
+*these* names and calls the originals, both layers observe the same calls
+when active together.
+
 Only *data-movement* calls route through here.  Axis-size queries
 (``lax.psum(1, axis)``) and anything outside the strategy bodies call
 ``jax.lax`` directly and are invisible to the interceptor, exactly as they
@@ -13,16 +22,35 @@ are invisible to the cost model.
 """
 from __future__ import annotations
 
+import math
+
 from jax import lax
+
+from repro import obs
+
+
+def _observe(kind: str, x, axis_name, perm=None) -> None:
+    """Record one collective in the obs layer (enabled-mode only)."""
+    group = int(lax.psum(1, axis_name))  # static axis-size query
+    words = int(math.prod(x.shape)) if getattr(x, "shape", None) else 1
+    obs.record_collective(kind, group, words, perm)
+    obs.counter("dist.collective.count").inc(kind=kind)
+    obs.counter("dist.collective.words").inc(words, kind=kind)
 
 
 def ppermute(x, axis_name, perm):
+    if obs.enabled():
+        _observe("ppermute", x, axis_name, perm)
     return lax.ppermute(x, axis_name, perm)
 
 
 def all_gather(x, axis_name, *, axis, tiled):
+    if obs.enabled():
+        _observe("all_gather", x, axis_name)
     return lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
 
 
 def psum(x, axis_name):
+    if obs.enabled():
+        _observe("psum", x, axis_name)
     return lax.psum(x, axis_name)

@@ -30,7 +30,13 @@ STRATEGIES = (
 
 @dataclasses.dataclass(frozen=True)
 class Estimate:
-    """Analytic cost record for one (strategy, problem, parallelism) cell."""
+    """Analytic cost record for one (strategy, problem, parallelism) cell.
+
+    ``msgs`` is the per-device collective-round count (ppermute rounds,
+    ring steps of a gather/reduce) -- the latency term a calibrated α–β
+    ranking (``repro.obs.MachineProfile.seconds``) charges α for; the
+    analytic ``total_s`` itself prices bandwidth only.
+    """
 
     strategy: str
     m: int
@@ -41,6 +47,7 @@ class Estimate:
     comm_s: float
     comm_bytes: float
     overlapped: bool
+    msgs: int = 0
 
     @property
     def total_s(self) -> float:
@@ -85,12 +92,15 @@ def estimate(strategy: str, m: int, n: int, k: int, tp: int,
     overlapped = strategy in ("ring_ag", "ring_rs", "cannon", "cannon25d")
     if strategy == "local" or tp == 1:
         comm_bytes = 0.0
+        msgs = 0
     elif strategy in ("xla_ag", "ring_ag"):
         # gather the row-sharded (m, k) operand: receive (tp-1)/tp of it
         comm_bytes = dtype_bytes * m * k * (tp - 1) / tp
+        msgs = tp - 1
     elif strategy in ("xla_rs", "ring_rs"):
         # reduce-scatter the (m, n) partial output
         comm_bytes = dtype_bytes * m * n * (tp - 1) / tp
+        msgs = tp - 1
     elif strategy in ("cannon", "summa"):
         if grid is not None:
             qx, qy = grid[0], grid[1]
@@ -101,6 +111,8 @@ def estimate(strategy: str, m: int, n: int, k: int, tp: int,
         # (q-1) * 2 block panels when qx == qy)
         comm_bytes = dtype_bytes * ((qy - 1) * (m / qx) * (k / qy)
                                     + (qx - 1) * (k / qx) * (n / qy))
+        # cannon: 2 skews + (q-1) rounds x {A, B}; summa: ring gathers
+        msgs = 2 * qx if strategy == "cannon" else (qx - 1) + (qy - 1)
     elif strategy in ("pod25d", "cannon25d"):
         if grid is not None:
             c = grid[0]
@@ -114,11 +126,14 @@ def estimate(strategy: str, m: int, n: int, k: int, tp: int,
                  + (qx - 1) * (k / (c * qx)) * (n / qy))
         reduce_c = (c - 1) / c * (m / qx) * (n / qy) * 2  # replicate + reduce C
         comm_bytes = dtype_bytes * (shift + reduce_c)
+        in_layer = 2 * qx if strategy == "cannon25d" else \
+            max((qx - 1) + (qy - 1), 0)
+        msgs = in_layer + 2 * (c - 1)  # + bidirectional pod-ring reduce
     else:  # pragma: no cover
         raise AssertionError(strategy)
     comm_s = comm_bytes / _cost.ICI_BW
     return Estimate(strategy, m, n, k, tp, compute_s, comm_s, comm_bytes,
-                    overlapped)
+                    overlapped, msgs)
 
 
 def applicable_strategies(tp: int) -> tuple:

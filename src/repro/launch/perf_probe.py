@@ -1,10 +1,21 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ must precede all other imports (jax locks device count on first init).
+"""Performance probes: link calibration (library) + the perf-iteration cell
+probe (CLI).
 
-"""Perf-iteration probe: lower ONE cell with config overrides and print the
-three roofline terms + per-kind collective bytes.  The Sec.-Perf hillclimb
-driver: each hypothesis -> change -> measure cycle is one invocation.
+**Library entry point** -- ``probe_links(mesh) -> MachineProfile`` runs the
+``repro.obs.calibrate`` microbenchmarks (ring ppermutes per mesh axis,
+jit'd matmul peak) and returns the fitted α–β machine profile the planner
+consumes via ``build_plan(profile=...)``.  Importing this module is
+side-effect free (no env mutation, no jax init).
+
+**CLI** -- the default ``__main__`` mode calibrates and writes the
+machine-profile JSON:
+
+    PYTHONPATH=src python -m repro.launch.perf_probe \
+        --profile-out machine_profile.json --devices 8 --mesh-shape 2x2
+
+The legacy perf-iteration mode (lower ONE arch x shape cell with config
+overrides and print the roofline terms; the Sec.-Perf hillclimb driver)
+is selected by ``--arch``:
 
     PYTHONPATH=src python -m repro.launch.perf_probe \
         --arch granite-20b --shape train_4k \
@@ -14,16 +25,15 @@ Overrides apply dataclasses.replace on the arch config; measurement always
 uses the final analyzer (invariant-aware by default; --naive-analyzer for
 the pessimistic count).  Appends a JSON record to perf_iterations.json.
 """
+from __future__ import annotations
+
 import argparse
-import dataclasses
 import json
+import os
 import time
 
-import jax
-
-from repro.configs import canonical, get_config
-from repro.launch.dryrun import lower_cell, _batch_shardings, _rep  # noqa
-from repro.launch.mesh import make_production_mesh
+from repro.obs.calibrate import probe_links  # noqa: F401  (library API)
+from repro.obs.profile import MachineProfile, save_profile  # noqa: F401
 
 
 def parse_override(kv: str):
@@ -38,22 +48,49 @@ def parse_override(kv: str):
     return k, v
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
-    ap.add_argument("--set", nargs="*", default=[], metavar="key=val")
-    ap.add_argument("--remat", default="config")
-    ap.add_argument("--no-zero", action="store_true")
-    ap.add_argument("--naive-analyzer", action="store_true")
-    ap.add_argument("--tag", default="probe")
-    ap.add_argument("--out", default="perf_iterations.json")
-    args = ap.parse_args()
+def _parse_mesh_shape(spec: str):
+    return tuple(int(s) for s in spec.lower().split("x") if s)
+
+
+def calibrate_main(args) -> None:
+    """Default mode: probe the links, write the machine-profile JSON."""
+    if args.devices > 1 and "host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            f"{os.environ.get('XLA_FLAGS', '')} "
+            f"--xla_force_host_platform_device_count={args.devices}").strip()
+    import jax
+    import numpy as np
+
+    mesh = None
+    devs = np.array(jax.devices())
+    if args.mesh_shape and len(devs) > 1:
+        shape = _parse_mesh_shape(args.mesh_shape)
+        names = ("x", "y", "z")[:len(shape)] if len(shape) > 1 else ("t",)
+        import math
+
+        mesh = jax.make_mesh(shape, names,
+                             devices=devs[:math.prod(shape)])
+    profile = probe_links(mesh, reps=args.reps)
+    save_profile(profile, args.profile_out)
+    print(json.dumps(profile.to_json(), indent=1, sort_keys=True))
+    print(f"# wrote {args.profile_out}")
+
+
+def cell_probe_main(args) -> None:
+    """Legacy perf-iteration mode (``--arch``): one cell, roofline terms."""
+    # must precede jax init: the cell probe needs a forced device farm
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+    from repro.configs import canonical
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.mesh import make_production_mesh
 
     overrides = dict(parse_override(kv) for kv in args.set)
 
     # monkey-patch get_config so lower_cell sees the overridden config
+    import dataclasses
+
     import repro.launch.dryrun as dr
     base_get = dr.get_config
 
@@ -92,6 +129,35 @@ def main() -> None:
     hist.append(rec)
     with open(args.out, "w") as f:
         json.dump(hist, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    # calibration mode (default)
+    ap.add_argument("--profile-out", default="machine_profile.json")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="forced host device count for CPU calibration")
+    ap.add_argument("--mesh-shape", default="",
+                    help="e.g. 2x2 or 8 -- mesh to probe axes on")
+    ap.add_argument("--reps", type=int, default=3)
+    # legacy cell-probe mode (selected by --arch)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--set", nargs="*", default=[], metavar="key=val")
+    ap.add_argument("--remat", default="config")
+    ap.add_argument("--no-zero", action="store_true")
+    ap.add_argument("--naive-analyzer", action="store_true")
+    ap.add_argument("--tag", default="probe")
+    ap.add_argument("--out", default="perf_iterations.json")
+    args = ap.parse_args()
+
+    if args.arch is not None:
+        if args.shape is None:
+            ap.error("--arch requires --shape")
+        cell_probe_main(args)
+    else:
+        calibrate_main(args)
 
 
 if __name__ == "__main__":

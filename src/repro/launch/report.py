@@ -63,6 +63,23 @@ def dryrun_table(cells):
     return "\n".join(rows)
 
 
+def plan_cache_table(info=None):
+    """One-row table over ``repro.plan.cache_info()`` (live process counters
+    unless a captured ``info`` dict -- e.g. from a metrics JSON -- is given)."""
+    if info is None:
+        from repro.plan import cache_info
+        info = cache_info()
+    hits, misses = info["hits"], info["misses"]
+    total = hits + misses
+    rate = f"{hits / total:.2f}" if total else "-"
+    return "\n".join([
+        "| hits | misses | hit rate | currsize | maxsize | evictions |",
+        "|---|---|---|---|---|---|",
+        f"| {hits} | {misses} | {rate} | {info['currsize']} | "
+        f"{info['maxsize']} | {info['evictions']} |",
+    ])
+
+
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results_v2.json"
     with open(path) as f:
@@ -75,6 +92,8 @@ def main():
     print("\n### Skipped cells\n")
     for arch, shape, why in data.get("skipped", []):
         print(f"* {arch} x {shape}: {why}")
+    print("\n### Plan cache\n")
+    print(plan_cache_table(data.get("plan_cache")))
 
 
 if __name__ == "__main__":

@@ -43,7 +43,8 @@ strategy override).  ``repro.dist.api.symmetric_matmul`` is a thin facade
 over this package, and ``planned_matmuls`` routes the layer library's
 x @ w products through it.
 """
-from .cache import PlanCache, cache_clear, cache_stats, plan_cache
+from .cache import (PlanCache, cache_clear, cache_info, cache_stats,
+                    plan_cache)
 from .context import planned_matmuls, planned_mesh
 from .ir import (SchedulePlan, TilingPlan, TorusProgram, build_plan,
                  mesh_candidates, mesh_fingerprint, rank_mesh_strategies)
@@ -60,6 +61,6 @@ __all__ = [
     "mesh_candidates", "mesh_fingerprint", "rank_mesh_strategies",
     "execute_plan", "lower_shard_map", "on_lower", "lower_pallas",
     "lower_tiling",
-    "PlanCache", "plan_cache", "cache_stats", "cache_clear",
+    "PlanCache", "plan_cache", "cache_stats", "cache_info", "cache_clear",
     "planned_matmuls", "planned_mesh", "Estimate", "estimate",
 ]

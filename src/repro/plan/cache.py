@@ -2,18 +2,25 @@
 cost-model ranking and schedule/permutation construction.
 
 Keys are ``(batch, shapes, dtypes, mesh fingerprint, strategy override,
-axes, schedule, tiling)`` -- everything that changes the emitted program.
-Stats are exposed for tests and the benchmark smoke job (a dispatch
-regression shows up as a miss storm).
+axes, schedule, tiling, profile)`` -- everything that changes the emitted
+program or its ranking.  Stats are exposed for tests and the benchmark
+smoke job (a dispatch regression shows up as a miss storm):
+``cache_info()`` is the public functools-style view (hits, misses, size,
+evictions, max entries) and is surfaced by ``repro.launch.report`` and the
+obs metrics snapshot; when ``repro.obs`` tracing is on, every lookup also
+bumps the ``plan.cache.hit`` / ``plan.cache.miss`` / ``plan.cache.evict``
+counters.
 """
 from __future__ import annotations
 
 import threading
 from typing import Any, Dict, Optional
 
+from repro import obs
+
 
 class PlanCache:
-    """A small thread-safe memo table with hit/miss counters."""
+    """A small thread-safe memo table with hit/miss/eviction counters."""
 
     def __init__(self, max_entries: int = 1024):
         self._store: Dict[Any, Any] = {}
@@ -21,6 +28,7 @@ class PlanCache:
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key) -> Optional[Any]:
         with self._lock:
@@ -29,25 +37,43 @@ class PlanCache:
                 self.misses += 1
             else:
                 self.hits += 1
-            return plan
+        if obs.enabled():
+            obs.counter("plan.cache.hit" if plan is not None
+                        else "plan.cache.miss").inc()
+        return plan
 
     def put(self, key, plan) -> None:
+        evicted = False
         with self._lock:
-            if len(self._store) >= self.max_entries:
+            if key not in self._store and \
+                    len(self._store) >= self.max_entries:
                 # drop the oldest insertion (dict preserves order)
                 self._store.pop(next(iter(self._store)))
+                self.evictions += 1
+                evicted = True
             self._store[key] = plan
+        if evicted and obs.enabled():
+            obs.counter("plan.cache.evict").inc()
 
     def clear(self) -> None:
         with self._lock:
             self._store.clear()
             self.hits = 0
             self.misses = 0
+            self.evictions = 0
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "size": len(self._store)}
+
+    def info(self) -> Dict[str, int]:
+        """functools.lru_cache-style accounting, plus evictions."""
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "currsize": len(self._store),
+                    "maxsize": self.max_entries,
+                    "evictions": self.evictions}
 
 
 plan_cache = PlanCache()
@@ -55,6 +81,12 @@ plan_cache = PlanCache()
 
 def cache_stats() -> Dict[str, int]:
     return plan_cache.stats()
+
+
+def cache_info() -> Dict[str, int]:
+    """Public hit/miss/size/eviction accounting of the process-global plan
+    cache (see ``PlanCache.info``)."""
+    return plan_cache.info()
 
 
 def cache_clear() -> None:

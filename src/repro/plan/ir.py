@@ -13,10 +13,12 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.schedule import TorusSchedule, cannon_schedule
 from repro.dist.api import Estimate, estimate
 
@@ -198,16 +200,28 @@ def _grid_for(mesh, strategy: str,
 
 
 def rank_mesh_strategies(m: int, n: int, k: int, mesh,
-                         dtype_bytes: int = 2) -> Tuple[Estimate, ...]:
+                         dtype_bytes: int = 2, *,
+                         profile=None) -> Tuple[Estimate, ...]:
     """Mesh-applicable strategies priced by ``estimate`` on the grids they
-    would actually execute, cheapest first."""
+    would actually execute, cheapest first.
+
+    With a calibrated ``profile`` (``repro.obs.MachineProfile``) the sort
+    key is measured seconds -- the fitted α–β applied to each estimate's
+    analytic bytes/message counts -- instead of the datasheet-constant
+    ``total_s``; the estimates themselves (the word counts conformance
+    checks) are identical either way.
+    """
     cands = mesh_candidates(mesh)
     ests = [
         estimate(s, m, n, k, mesh.size, dtype_bytes,
                  grid=_grid_for(mesh, s, _plan_axes(mesh, s, None)))
         for s in cands
     ]
-    ests.sort(key=lambda e: (e.total_s, cands.index(e.strategy)))
+    if profile is not None:
+        key = lambda e: (profile.seconds(e), cands.index(e.strategy))  # noqa: E731
+    else:
+        key = lambda e: (e.total_s, cands.index(e.strategy))  # noqa: E731
+    ests.sort(key=key)
     return tuple(ests)
 
 
@@ -254,13 +268,19 @@ def build_plan(
     axes: Optional[Tuple[str, ...]] = None,
     schedule: Optional[TorusSchedule] = None,
     tiling: Optional[TilingPlan] = None,
+    profile=None,
     use_cache: bool = True,
 ) -> SchedulePlan:
     """Plan a global (batch..., m, k) x (k, n) matmul on ``mesh``.
 
     Strategy selection ranks the mesh-applicable candidates with the analytic
     cost model (``strategy`` forces one; ``schedule`` forces a custom torus
-    schedule).  Results are memoized -- see ``repro.plan.cache``.
+    schedule; a calibrated ``profile`` -- ``repro.obs.MachineProfile`` --
+    makes the ranking use measured seconds instead of datasheet constants,
+    without changing any plan's word counts).  Results are memoized -- see
+    ``repro.plan.cache``.  Under ``repro.obs`` tracing every call is a
+    ``plan.build`` span and cache misses record their build time in the
+    ``plan.build_us`` histogram.
     """
     from .cache import plan_cache
 
@@ -271,23 +291,31 @@ def build_plan(
     key = (
         "plan", batch, m, n, k, jnp.dtype(a_dtype).name, jnp.dtype(b_dtype).name,
         out_dtype.name, mesh_fingerprint(mesh), strategy, axes, schedule, tiling,
+        profile,
     )
-    if use_cache:
-        cached = plan_cache.get(key)
-        if cached is not None:
-            return cached
-    plan = _build_plan_uncached(
-        m, n, k, mesh=mesh, strategy=strategy, batch=batch,
-        a_dtype=a_dtype, out_dtype=out_dtype, axes=axes,
-        schedule=schedule, tiling=tiling,
-    )
-    if use_cache:
-        plan_cache.put(key, plan)
+    with obs.span("plan.build", m=m, n=n, k=k, strategy=strategy or "auto"):
+        if use_cache:
+            cached = plan_cache.get(key)
+            if cached is not None:
+                return cached
+        t0 = time.perf_counter()
+        plan = _build_plan_uncached(
+            m, n, k, mesh=mesh, strategy=strategy, batch=batch,
+            a_dtype=a_dtype, out_dtype=out_dtype, axes=axes,
+            schedule=schedule, tiling=tiling, profile=profile,
+        )
+        if obs.enabled():
+            obs.histogram("plan.build_us").observe(
+                (time.perf_counter() - t0) * 1e6)
+            obs.instant("plan.built", strategy=plan.strategy)
+        if use_cache:
+            plan_cache.put(key, plan)
     return plan
 
 
 def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
-                         out_dtype, axes, schedule, tiling) -> SchedulePlan:
+                         out_dtype, axes, schedule, tiling,
+                         profile=None) -> SchedulePlan:
     flat_m = m * math.prod(batch) if batch else m
     dtype_bytes = jnp.dtype(a_dtype).itemsize
     cost = None
@@ -306,7 +334,8 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
         return _torus_plan(m, n, k, batch, out_dtype, mesh, ax, schedule,
                            tiling, cost=None, strategy=strategy)
     if strategy is None:
-        ranked = rank_mesh_strategies(flat_m, n, k, mesh, dtype_bytes)
+        ranked = rank_mesh_strategies(flat_m, n, k, mesh, dtype_bytes,
+                                      profile=profile)
         cost = ranked[0]
         strategy = cost.strategy
     elif strategy in _EXECUTABLE:

@@ -21,6 +21,7 @@ import math
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.dist._util import pad_to
 from repro.dist.cannon import torus_program_body
 from repro.dist.pod25d import (cannon25d_body, pod25d_slab_body,
@@ -69,10 +70,11 @@ def lower_shard_map(plan: SchedulePlan):
     call pure dictionary lookups down to the jit boundary.  Plans built on
     unhashable duck-typed meshes (tests) lower uncached."""
     _notify_lower(plan)
-    try:
-        return _lower_shard_map_cached(plan)
-    except TypeError:
-        return _lower_shard_map(plan)
+    with obs.span("plan.lower", strategy=plan.strategy):
+        try:
+            return _lower_shard_map_cached(plan)
+        except TypeError:
+            return _lower_shard_map(plan)
 
 
 @functools.lru_cache(maxsize=256)
@@ -190,20 +192,24 @@ def execute_plan(plan: SchedulePlan, a: jax.Array, b: jax.Array) -> jax.Array:
     if a.shape[-1] != b.shape[-2 if b.ndim > 1 else 0]:
         raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
     run = lower_shard_map(plan)
-    if a.ndim == 2 and b.ndim == 2:
-        return run(a, b)
-    if a.ndim > 2 and b.ndim == 2:
-        batch = a.shape[:-2]
-        m, k = a.shape[-2], a.shape[-1]
-        flat = a.reshape((math.prod(batch) * m, k))
-        out = run(flat, b)
-        return out.reshape(batch + (m, b.shape[-1]))
-    if a.ndim == b.ndim and a.ndim > 2 and a.shape[:-2] == b.shape[:-2]:
-        batch = a.shape[:-2]
-        af = a.reshape((-1,) + a.shape[-2:])
-        bf = b.reshape((-1,) + b.shape[-2:])
-        # one traced program scanned over the batch, not B separate dispatches
-        out = jax.lax.map(lambda ab: run(ab[0], ab[1]), (af, bf))
-        return out.reshape(batch + out.shape[-2:])
+    # the span covers tracing of the shard_map body, so every collective
+    # recorded at the dist seam inherits the strategy tag
+    with obs.span("plan.execute", strategy=plan.strategy,
+                  m=plan.m, n=plan.n, k=plan.k):
+        if a.ndim == 2 and b.ndim == 2:
+            return run(a, b)
+        if a.ndim > 2 and b.ndim == 2:
+            batch = a.shape[:-2]
+            m, k = a.shape[-2], a.shape[-1]
+            flat = a.reshape((math.prod(batch) * m, k))
+            out = run(flat, b)
+            return out.reshape(batch + (m, b.shape[-1]))
+        if a.ndim == b.ndim and a.ndim > 2 and a.shape[:-2] == b.shape[:-2]:
+            batch = a.shape[:-2]
+            af = a.reshape((-1,) + a.shape[-2:])
+            bf = b.reshape((-1,) + b.shape[-2:])
+            # one traced program scanned over the batch, not B dispatches
+            out = jax.lax.map(lambda ab: run(ab[0], ab[1]), (af, bf))
+            return out.reshape(batch + out.shape[-2:])
     raise ValueError(
         f"unsupported operand ranks for planned matmul: {a.shape} x {b.shape}")

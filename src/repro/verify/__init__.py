@@ -18,19 +18,25 @@ communication:
 
 Every future lowering (fat-tree, hex) lands against this oracle instead of
 only bitwise-output tests.
+
+``drift`` adds the live-machine leg: the obs recorder, the interceptor,
+and the trace compared on real executions, plus calibrated-ranking
+stability against a stored machine profile (``check_drift``).
 """
-from . import conformance, interceptor, trace
+from . import conformance, drift, interceptor, trace
 from .conformance import (ConformanceError, ConformanceReport, check,
                           compare_records, hlo_collective_bytes,
                           matrix_cells, predicted_words_per_device,
                           run_matrix)
+from .drift import check_drift, ranking_drift
 from .interceptor import Capture, intercept, measure_plan
 from .trace import (CollectiveRecord, MachineTrace, Trace, canonical_perm,
                     fattree_level_words, padded_dims, trace_fattree,
                     trace_hex, trace_plan)
 
 __all__ = [
-    "conformance", "interceptor", "trace",
+    "conformance", "drift", "interceptor", "trace",
+    "check_drift", "ranking_drift",
     "ConformanceError", "ConformanceReport", "check", "compare_records",
     "hlo_collective_bytes", "matrix_cells", "predicted_words_per_device",
     "run_matrix", "Capture", "intercept", "measure_plan",
