@@ -278,6 +278,88 @@ def bench_plan_dispatch() -> List[Row]:
     )]
 
 
+# -- overlapped vs staged execution -------------------------------------------
+
+_OVERLAP_PROBE = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=" + sys.argv[1])
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+sys.path.insert(0, "src")
+from repro.plan import build_plan
+from repro.plan.lower_shard_map import _lower_shard_map
+
+q, n = 2, 512
+devs = np.array(jax.devices())
+mesh = jax.make_mesh((q, q), ("x", "y"), devices=devs[:q*q])
+rng = np.random.default_rng(0)
+a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+out = {"q": q, "n": n}
+results = {}
+for name, ov in (("staged", False), ("overlapped", True)):
+    plan = build_plan(n, n, n, mesh=mesh, strategy="cannon",
+                      a_dtype=a.dtype, b_dtype=b.dtype,
+                      overlap=ov, use_cache=False)
+    f = jax.jit(_lower_shard_map(plan))
+    results[name] = np.asarray(jax.block_until_ready(f(a, b)))
+    best = float("inf")
+    for _ in range(7):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(a, b))
+        best = min(best, time.perf_counter() - t0)
+    out[name + "_us"] = best * 1e6
+out["bitwise_equal"] = bool(
+    np.array_equal(results["staged"], results["overlapped"]))
+print("PROBE_JSON:" + json.dumps(out))
+"""
+
+
+def bench_overlap_vs_staged() -> List[Row]:
+    """Paired staged-vs-overlapped cannon on a forced-host 2x2 mesh: both
+    variants' us_per_call plus the speedup ratio.  CI guard: raises when
+    the overlapped body is slower than the staged one beyond the
+    ``OVERLAP_DRIFT_MARGIN`` fraction (default 10%) -- host-CPU timing is
+    noisy, so the margin absorbs jitter while still catching a pessimized
+    double-buffer lowering.  Also asserts bitwise-identical outputs (the
+    overlapped torus body is a pure dataflow reorder)."""
+    margin = float(os.environ.get("OVERLAP_DRIFT_MARGIN", "0.10"))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _OVERLAP_PROBE, "4"],
+        capture_output=True, text=True, env=env, cwd=_repo_root(),
+        timeout=600,
+    )
+    out = None
+    for line in res.stdout.splitlines():
+        if line.startswith("PROBE_JSON:"):
+            out = json.loads(line[len("PROBE_JSON:"):])
+    if out is None:
+        raise RuntimeError(
+            f"overlap probe failed:\n{res.stdout[-2000:]}\n"
+            f"{res.stderr[-2000:]}")
+    staged, over = out["staged_us"], out["overlapped_us"]
+    speedup = staged / max(over, 1e-9)
+    rows = [
+        ("overlap_vs_staged_cannon_2x2", over,
+         f"staged_us={staged:.1f};overlapped_us={over:.1f};"
+         f"speedup={speedup:.2f}x;bitwise_equal={out['bitwise_equal']};"
+         f"margin={margin:.2f}"),
+        ("overlap_vs_staged_cannon_2x2_staged_ref", staged,
+         f"n={out['n']};q={out['q']}"),
+    ]
+    if not out["bitwise_equal"]:
+        raise RuntimeError(
+            "overlapped cannon output differs bitwise from staged")
+    if over > staged * (1.0 + margin):
+        raise RuntimeError(
+            f"overlapped cannon slower than staged beyond margin: "
+            f"{over:.1f}us vs {staged:.1f}us (margin {margin:.0%})")
+    return rows
+
+
 # -- subprocess probe ----------------------------------------------------------
 
 _PROBE = r"""
@@ -362,14 +444,16 @@ ALL_BENCHES = (
     bench_flash_kernel,
     bench_strategy_choice,
     bench_plan_dispatch,
+    bench_overlap_vs_staged,
 )
 
-# tiny-shape subset for CI (`benchmarks/run.py --smoke`): no subprocess
-# device farms, no big compiles; surfaces plan-cache and dispatch
-# regressions before merge
+# tiny-shape subset for CI (`benchmarks/run.py --smoke`): no big compiles,
+# one small 4-device subprocess; surfaces plan-cache, dispatch, and
+# overlap-lowering regressions before merge
 SMOKE_BENCHES = (
     bench_lowerbound,
     bench_spacebounded,
     bench_strategy_choice,
     bench_plan_dispatch,
+    bench_overlap_vs_staged,
 )

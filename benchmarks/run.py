@@ -60,10 +60,11 @@ def run_conformance() -> int:
     from repro.verify import run_matrix
 
     rows = run_matrix()
-    print("strategy,mesh,case,dtype,ok,words_per_node,error")
+    print("strategy,mesh,case,dtype,overlap,ok,words_per_node,error")
     for r in rows:
         mesh = "x".join(str(s) for s in r["mesh"])
         print(f"{r['strategy']},{mesh},{r['case']},{r['dtype']},"
+              f"{r.get('overlap', False)},"
               f"{r['ok']},{r['words_per_node']},{r['error']}", flush=True)
     bad = [r for r in rows if not r["ok"]]
     with open("conformance_results.json", "w") as f:
@@ -103,9 +104,19 @@ def run_drift(argv) -> int:
 
 
 def run_report(path: str) -> int:
-    """Pretty-print a metrics snapshot written by repro.obs.write_metrics."""
+    """Pretty-print a metrics snapshot written by repro.obs.write_metrics,
+    or a bench_results*.json row list written by this driver."""
     with open(path) as f:
         snap = json.load(f)
+    if isinstance(snap, list):
+        # bench results: rows with possibly-null us_per_call and error rows
+        print(f"# bench report: {path} ({len(snap)} rows)")
+        for row in snap:
+            us = row.get("us_per_call")
+            us_field = "-" if us is None else f"{us:.1f}"
+            tail = row.get("error") or row.get("derived", "")
+            print(f"  {row.get('name', '?')}: {us_field} us  {tail}")
+        return 0
     print(f"# metrics report: {path} (schema {snap.get('schema', '?')})")
     metrics = snap.get("metrics", {})
     if metrics:

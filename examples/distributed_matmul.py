@@ -32,7 +32,14 @@ def main():
     ref = (a.astype(jnp.float32) @ b.astype(jnp.float32)).astype(jnp.bfloat16)
 
     print(f"=== {n}x{n} matmul on a {q}x{q} fake torus ===")
-    for name, fn in (("cannon", cannon_matmul), ("summa", summa_matmul)):
+    # summa staged keeps the classic all-gather signature; summa+overlap
+    # decomposes each gather into the one-hop ppermute chain it can hide
+    # behind the local multiplies (same words either way)
+    for name, fn in (
+            ("cannon", cannon_matmul),
+            ("summa", functools.partial(summa_matmul, overlap=False)),
+            ("summa+ov", functools.partial(summa_matmul, overlap=True)),
+    ):
         f = jax.jit(functools.partial(fn, mesh=mesh, axis_x="x", axis_y="y"))
         comp = f.lower(a, b).compile()
         out = f(a, b)

@@ -121,7 +121,8 @@ MXU_DIM = 128             # systolic array tile edge
 
 def calibrated_total_s(flops: float, comm_bytes: float, msgs: float, *,
                        alpha_s: float, bw_bytes_per_s: float,
-                       peak_flops: float, overlapped: bool) -> float:
+                       peak_flops: float, overlapped: bool,
+                       comm_terms=None) -> float:
     """Calibrated seconds for one strategy cell: the analytic word/message
     counts priced with *measured* machine parameters (a fitted
     ``repro.obs.profile.MachineProfile``) instead of the datasheet
@@ -134,9 +135,19 @@ def calibrated_total_s(flops: float, comm_bytes: float, msgs: float, *,
     ``Estimate.total_s`` shape, with calibrated coefficients.  With α = 0
     and the datasheet bw/flops this reproduces the analytic ranking
     (``repro.obs.default_profile`` pins that identity).
+
+    ``comm_terms``, when given, replaces the pooled α–β pair with per-axis
+    pricing: an iterable of ``(alpha_s, bw_bytes_per_s, bytes, msgs)``
+    tuples (one per mesh axis the strategy moves words over), summed into
+    the communication time.  The pooled ``alpha_s``/``bw_bytes_per_s``/
+    ``comm_bytes``/``msgs`` arguments are ignored in that case.
     """
     compute_s = flops / max(peak_flops, 1e-9)
-    comm_s = msgs * alpha_s + comm_bytes / max(bw_bytes_per_s, 1e-9)
+    if comm_terms is not None:
+        comm_s = sum(ms * a + b / max(bw, 1e-9)
+                     for a, bw, b, ms in comm_terms)
+    else:
+        comm_s = msgs * alpha_s + comm_bytes / max(bw_bytes_per_s, 1e-9)
     return max(compute_s, comm_s) if overlapped else compute_s + comm_s
 
 

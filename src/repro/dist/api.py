@@ -4,8 +4,13 @@
 TPU constants in ``repro.core.cost`` (ICI link bandwidth, peak MXU flops):
 compute time is the per-device share of 2mnk flops, communication time is
 the strategy's per-device received bytes over one ICI link, and overlapped
-strategies (the ring/ppermute family) pay max(compute, comm) instead of the
-sum -- that inequality is exactly why the one-hop solutions win.
+strategies pay max(compute, comm) instead of the sum -- that inequality is
+exactly why the one-hop solutions win.  Whether a cell is overlapped is no
+longer keyed on the strategy *name*: ``overlap_capability`` reports which
+lowerings have a double-buffered body (since the overlapped execution mode
+that includes SUMMA's decomposed gather chains), and ``estimate``'s
+``overlap`` argument pins one variant so the planner can price the
+staged-vs-overlapped pair of the same program.
 
 ``choose`` ranks the strategies applicable to a device count / mesh
 topology with the cost model (topology acts only as a *filter*) and returns
@@ -16,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 
@@ -36,6 +41,14 @@ class Estimate:
     ring steps of a gather/reduce) -- the latency term a calibrated α–β
     ranking (``repro.obs.MachineProfile.seconds``) charges α for; the
     analytic ``total_s`` itself prices bandwidth only.
+
+    ``overlapped`` is the *variant* this cell prices (max vs. sum); it is
+    derived from the lowering's capability (``overlap_capability``), not
+    the strategy name.  ``comm_by_axis`` splits ``comm_bytes``/``msgs``
+    into per-mesh-axis ``(axis_name, bytes, msgs)`` terms when the caller
+    supplies the resolved axis roles -- the hook a calibrated profile with
+    per-axis ``axis:{name}`` link classes prices each term with its own
+    α–β (empty when axes are unknown or the strategy flattens them).
     """
 
     strategy: str
@@ -48,12 +61,27 @@ class Estimate:
     comm_bytes: float
     overlapped: bool
     msgs: int = 0
+    comm_by_axis: Tuple[Tuple[str, float, int], ...] = ()
 
     @property
     def total_s(self) -> float:
         if self.overlapped:
             return max(self.compute_s, self.comm_s)
         return self.compute_s + self.comm_s
+
+
+def overlap_capability(strategy: str, grid=None) -> bool:
+    """Whether ``strategy``'s lowering has a double-buffered (overlapped)
+    body: the ring chains are intrinsically overlapped, the torus family
+    prefetches step k+1's A/B permutes under step k's multiply, and SUMMA /
+    3-axis pod25d run their gathers as pipelined one-hop chains.  The
+    1-axis pod25d slab program (``grid == (c,)``) and the XLA-collective /
+    local baselines have no overlapped variant."""
+    if strategy in ("ring_ag", "ring_rs", "cannon", "cannon25d", "summa"):
+        return True
+    if strategy == "pod25d":
+        return grid is None or len(grid) >= 3
+    return False
 
 
 def _square_side(tp: int) -> Optional[int]:
@@ -75,9 +103,10 @@ def _pod_factor(tp: int) -> Optional[tuple]:
 
 
 def estimate(strategy: str, m: int, n: int, k: int, tp: int,
-             dtype_bytes: int = 2, *, grid=None) -> Estimate:
+             dtype_bytes: int = 2, *, grid=None, axes=None,
+             overlap: Optional[bool] = None) -> Estimate:
     """Analytic cost of ``strategy`` for an (m, k) x (k, n) matmul on ``tp``
-    devices.  ``total_s`` = max(compute, comm) for overlapped strategies,
+    devices.  ``total_s`` = max(compute, comm) for overlapped variants,
     sum otherwise.
 
     ``grid`` optionally pins the device-grid factorization the lowering
@@ -85,11 +114,30 @@ def estimate(strategy: str, m: int, n: int, k: int, tp: int,
     ``(c, qx, qy)`` (or ``(c,)``) for the 2.5D family -- so mesh-aware
     rankings (``repro.plan.rank_mesh_strategies``) price the real program
     rather than the canonical factorization of ``tp`` derived here.
+
+    ``axes`` optionally names the mesh axes each communication term rides
+    (the plan's resolved axis roles, matching ``grid``); when given, the
+    estimate carries per-axis ``comm_by_axis`` terms summing exactly to
+    ``comm_bytes``/``msgs`` so a profile with per-axis link classes prices
+    each axis with its own α–β.
+
+    ``overlap`` pins the variant: ``None`` prices the lowering's default
+    (overlapped whenever ``overlap_capability`` allows), ``False`` the
+    staged twin, ``True`` demands overlap and raises for strategies with
+    no overlapped body.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
+    capability = overlap_capability(strategy, grid)
+    if overlap is None:
+        overlapped = capability
+    elif overlap and not capability:
+        raise ValueError(
+            f"strategy {strategy!r} (grid={grid}) has no overlapped lowering")
+    else:
+        overlapped = bool(overlap)
     compute_s = 2.0 * m * n * k / tp / _cost.PEAK_FLOPS_BF16
-    overlapped = strategy in ("ring_ag", "ring_rs", "cannon", "cannon25d")
+    axis_terms = []
     if strategy == "local" or tp == 1:
         comm_bytes = 0.0
         msgs = 0
@@ -97,10 +145,14 @@ def estimate(strategy: str, m: int, n: int, k: int, tp: int,
         # gather the row-sharded (m, k) operand: receive (tp-1)/tp of it
         comm_bytes = dtype_bytes * m * k * (tp - 1) / tp
         msgs = tp - 1
+        if axes is not None and len(axes) == 1:
+            axis_terms = [(axes[0], comm_bytes, msgs)]
     elif strategy in ("xla_rs", "ring_rs"):
         # reduce-scatter the (m, n) partial output
         comm_bytes = dtype_bytes * m * n * (tp - 1) / tp
         msgs = tp - 1
+        if axes is not None and len(axes) == 1:
+            axis_terms = [(axes[0], comm_bytes, msgs)]
     elif strategy in ("cannon", "summa"):
         if grid is not None:
             qx, qy = grid[0], grid[1]
@@ -109,10 +161,17 @@ def estimate(strategy: str, m: int, n: int, k: int, tp: int,
         # per device: the (m/qx, k) row panel from qy-1 peers and the
         # (k, n/qy) column panel from qx-1 peers (equal to the classic
         # (q-1) * 2 block panels when qx == qy)
-        comm_bytes = dtype_bytes * ((qy - 1) * (m / qx) * (k / qy)
-                                    + (qx - 1) * (k / qx) * (n / qy))
+        a_bytes = dtype_bytes * (qy - 1) * (m / qx) * (k / qy)
+        b_bytes = dtype_bytes * (qx - 1) * (k / qx) * (n / qy)
+        comm_bytes = a_bytes + b_bytes
         # cannon: 2 skews + (q-1) rounds x {A, B}; summa: ring gathers
         msgs = 2 * qx if strategy == "cannon" else (qx - 1) + (qy - 1)
+        if axes is not None and len(axes) >= 2:
+            # A panels move along the column axis, B panels along the row
+            # axis (cannon splits its 2q rounds evenly; summa's chain
+            # lengths are the gather-group sizes minus one)
+            ma, mb = (qx, qx) if strategy == "cannon" else (qy - 1, qx - 1)
+            axis_terms = [(axes[1], a_bytes, ma), (axes[0], b_bytes, mb)]
     elif strategy in ("pod25d", "cannon25d"):
         if grid is not None:
             c = grid[0]
@@ -122,18 +181,28 @@ def estimate(strategy: str, m: int, n: int, k: int, tp: int,
             q, c = _pod_factor(tp) or (_square_side(tp) or 2, 1)
             qx = qy = q
         # in-layer panel exchange on the (qx, qy) layer over the k/c slab
-        shift = ((qy - 1) * (m / qx) * (k / (c * qy))
-                 + (qx - 1) * (k / (c * qx)) * (n / qy))
-        reduce_c = (c - 1) / c * (m / qx) * (n / qy) * 2  # replicate + reduce C
-        comm_bytes = dtype_bytes * (shift + reduce_c)
+        a_bytes = dtype_bytes * (qy - 1) * (m / qx) * (k / (c * qy))
+        b_bytes = dtype_bytes * (qx - 1) * (k / (c * qx)) * (n / qy)
+        reduce_bytes = \
+            dtype_bytes * (c - 1) / c * (m / qx) * (n / qy) * 2  # repl+reduce
+        comm_bytes = a_bytes + b_bytes + reduce_bytes
         in_layer = 2 * qx if strategy == "cannon25d" else \
             max((qx - 1) + (qy - 1), 0)
         msgs = in_layer + 2 * (c - 1)  # + bidirectional pod-ring reduce
+        if axes is not None and len(axes) >= 3:
+            ma, mb = (qx, qx) if strategy == "cannon25d" else \
+                (max(qy - 1, 0), max(qx - 1, 0))
+            axis_terms = [(axes[2], a_bytes, ma), (axes[1], b_bytes, mb),
+                          (axes[0], reduce_bytes, 2 * (c - 1))]
+        elif axes is not None and len(axes) == 1:
+            axis_terms = [(axes[0], comm_bytes, msgs)]
     else:  # pragma: no cover
         raise AssertionError(strategy)
     comm_s = comm_bytes / _cost.ICI_BW
+    comm_by_axis = tuple(
+        (str(a), float(b), int(ms)) for a, b, ms in axis_terms)
     return Estimate(strategy, m, n, k, tp, compute_s, comm_s, comm_bytes,
-                    overlapped, msgs)
+                    overlapped, msgs, comm_by_axis)
 
 
 def applicable_strategies(tp: int) -> tuple:
@@ -192,16 +261,20 @@ def choose(m: int, n: int, k: int, *, tp: Optional[int] = None, mesh=None,
 
 def symmetric_matmul(a: jax.Array, b: jax.Array, *, mesh=None,
                      strategy: Optional[str] = None,
-                     out_dtype=None) -> jax.Array:
+                     out_dtype=None,
+                     overlap: Optional[bool] = None) -> jax.Array:
     """Global (batch..., M, K) x (K, N) matmul dispatched through the plan
     engine: strategy picked by the cost model over the mesh-applicable
     candidates (or forced via ``strategy``), plan memoized in the plan
-    cache, leading batch dims folded before planning."""
+    cache, leading batch dims folded before planning.  ``overlap`` forces
+    the double-buffered (``True``) or staged (``False``) lowering; the
+    default lets the planner pick (see ``repro.plan.build_plan``)."""
     from repro.plan import build_plan, execute_plan
 
     plan = build_plan(
         a.shape[-2], b.shape[-1], a.shape[-1], mesh=mesh, strategy=strategy,
         batch=tuple(a.shape[:-2]),
         a_dtype=a.dtype, b_dtype=b.dtype, out_dtype=out_dtype,
+        overlap=overlap,
     )
     return execute_plan(plan, a, b)

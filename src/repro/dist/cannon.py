@@ -25,6 +25,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.schedule import TorusSchedule, cannon_schedule
 
 from . import _collectives
@@ -93,6 +94,43 @@ def torus_program_body(prog, axis_x: str, axis_y: str, local_fn=None):
                 ab = _permute(ab, axes, prog.step_a)
                 bb = _permute(bb, axes, prog.step_b)
                 acc = _permute(acc, axes, prog.step_c)
+        return _permute(acc, axes, prog.collect_c)
+
+    return body
+
+
+def torus_program_body_overlapped(prog, axis_x: str, axis_y: str,
+                                  local_fn=None):
+    """Double-buffered variant of ``torus_program_body`` (collective-matmul
+    style): step k+1's A/B ppermutes are issued BEFORE step k's local
+    multiply -- the same prefetch trick ``repro.dist.ring`` uses on 1-D
+    rings -- so XLA's latency-hiding scheduler can run the permutes
+    asynchronously under the matmul.  C's per-step permute consumes the
+    fresh partial sum and must stay after the multiply (it is the exposed
+    remainder).
+
+    The permutes and multiplies are the *identical* operations of the
+    staged body in a reordered data-flow: every ``local_fn`` call sees the
+    same operands and the accumulator chain is unchanged, so outputs are
+    bitwise-identical and the collective multiset is the same (the
+    conformance harness checks both)."""
+    axes = (axis_x, axis_y)
+    local_fn = local_fn or local_matmul
+
+    def body(ab, bb):
+        ab = _permute(ab, axes, prog.skew_a)
+        bb = _permute(bb, axes, prog.skew_b)
+        acc = jnp.zeros((ab.shape[0], bb.shape[1]), jnp.float32)
+        for step in range(prog.steps):
+            nxt_a = nxt_b = None
+            if step < prog.steps - 1:
+                with obs.span("dist.prefetch", comm="hidden"):
+                    nxt_a = _permute(ab, axes, prog.step_a)
+                    nxt_b = _permute(bb, axes, prog.step_b)
+            acc = acc + local_fn(ab, bb, out_dtype=jnp.float32)
+            if step < prog.steps - 1:
+                acc = _permute(acc, axes, prog.step_c)
+                ab, bb = nxt_a, nxt_b
         return _permute(acc, axes, prog.collect_c)
 
     return body

@@ -27,8 +27,9 @@ import jax
 import jax.numpy as jnp
 
 from . import _collectives
-from .cannon import torus_program_body
+from .cannon import torus_program_body, torus_program_body_overlapped
 from .local import local_matmul
+from .summa import summa_overlapped_body
 
 
 def _inlayer_axes(mesh, pod_axis: str, axis_x: Optional[str],
@@ -68,13 +69,31 @@ def pod25d_summa_body(pod_axis: str, axis_x: str, axis_y: str, out_dtype,
     return body
 
 
+def pod25d_summa_overlapped_body(pod_axis: str, axis_x: str, axis_y: str,
+                                 out_dtype, local_fn=None):
+    """Overlapped in-layer variant of ``pod25d_summa_body``: the layer's
+    gathers run as pipelined one-hop chains (``summa_overlapped_body`` on
+    the k/c contraction slab).  The pod psum consumes the finished partial
+    sum, so it stays monolithic -- only the in-layer movement overlaps."""
+    inner = summa_overlapped_body(axis_x, axis_y, jnp.float32,
+                                  local_fn=local_fn)
+
+    def body(ab, bb):
+        part = inner(ab, bb)
+        return _collectives.psum(part, pod_axis).astype(out_dtype)
+
+    return body
+
+
 def cannon25d_body(pod_axis: str, axis_x: str, axis_y: str, prog,
-                   out_dtype, local_fn=None):
+                   out_dtype, local_fn=None, overlap: bool = False):
     """Lowering rule, Cannon in-layer: each pod layer executes the reified
     torus program ``prog`` (the solver's ``cannon_schedule(q)`` ppermute
     program) on its contraction slab, and C partial sums reduce over the
-    pod axis."""
-    inner = torus_program_body(prog, axis_x, axis_y, local_fn=local_fn)
+    pod axis.  ``overlap`` selects the double-buffered in-layer body (the
+    pod psum is data-dependent and stays after the layer finishes)."""
+    body_fn = torus_program_body_overlapped if overlap else torus_program_body
+    inner = body_fn(prog, axis_x, axis_y, local_fn=local_fn)
 
     def body(ab, bb):
         acc = inner(ab, bb)

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs
+
 from . import _collectives
 from .local import local_matmul
 
@@ -56,7 +58,10 @@ def ring_ag_matmul(x: jax.Array, w: jax.Array, axis, *,
     cur = x
     for s in range(n):
         # issue the permute first so it overlaps the matmul below
-        nxt = _collectives.ppermute(cur, axis, perm) if s < n - 1 else None
+        nxt = None
+        if s < n - 1:
+            with obs.span("dist.prefetch", comm="hidden"):
+                nxt = _collectives.ppermute(cur, axis, perm)
         prod = local_fn(cur, w, out_dtype=out_dtype)
         src = (idx - s) % n  # origin device of the resident chunk
         start = (0,) * (len(out_shape) - 2) + (src * chunk, 0)

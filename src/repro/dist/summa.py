@@ -3,20 +3,29 @@ Cannon's permute chains.
 
 SUMMA's per-step row/column panel broadcasts, summed over the q steps, are
 exactly a tiled all-gather of A along the mesh columns and of B along the
-mesh rows -- which is how XLA lowers them on a torus -- so the lowering rule
-emits the fused form: two all-gathers plus one local matmul.  Same
-asymptotic words as Cannon (each device receives (q-1)/q of a row + column
-panel) but as monolithic all-gathers, not overlappable one-hop permutes;
-the HLO difference is visible in examples/distributed_matmul.py.
+mesh rows -- which is how XLA lowers them on a torus -- so the staged
+lowering rule (``summa_body``) emits the fused form: two all-gathers plus
+one local matmul.  Monolithic gathers cannot hide behind compute, so the
+overlapped rule (``summa_overlapped_body``) decomposes them into one-hop
+ppermute chains: the B column panel is chain-gathered first (nothing to
+multiply yet -- exposed), then the A k-slabs walk their ring with each hop
+issued *before* the partial multiply against the matching B slab, hiding
+the A movement under compute.  Both bodies move the identical per-device
+words ((qy-1) A-shards + (qx-1) B-shards); the overlapped output differs
+from the staged single-dot only by fp32 summation order.
 
 Unlike Cannon, SUMMA tolerates rectangular meshes (axis_x != axis_y sizes).
-``summa_body`` is the lowering rule consumed by
+The ``*_body`` functions are the lowering rules consumed by
 ``repro.plan.lower_shard_map``; ``summa_matmul`` is a facade over the plan
 engine.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import obs
 
 from . import _collectives
 from .local import local_matmul
@@ -35,15 +44,77 @@ def summa_body(axis_x: str, axis_y: str, out_dtype, local_fn=None):
     return body
 
 
+def gather_chain(x: jax.Array, axis_name: str) -> jax.Array:
+    """One-hop ppermute chain equivalent of
+    ``all_gather(x, axis_name, axis=0, tiled=True)``: each of the g - 1
+    steps writes the resident shard into its origin slot and forwards it
+    one hop around the ring.  Moves the same (g - 1) shards per device as
+    the monolithic gather, but as individually schedulable one-hop
+    permutes -- the decomposition that lets SUMMA join the overlapped
+    family."""
+    g = int(lax.psum(1, axis_name))
+    idx = lax.axis_index(axis_name)
+    rows = x.shape[0]
+    out = jnp.zeros((g * rows,) + x.shape[1:], x.dtype)
+    perm = [(d, (d + 1) % g) for d in range(g)]
+    cur = x
+    for s in range(g):
+        src = (idx - s) % g  # origin device of the resident shard
+        out = lax.dynamic_update_slice(
+            out, cur, (src * rows,) + (0,) * (x.ndim - 1))
+        if s < g - 1:
+            cur = _collectives.ppermute(cur, axis_name, perm)
+    return out
+
+
+def summa_overlapped_body(axis_x: str, axis_y: str, out_dtype,
+                          local_fn=None):
+    """shard_map body: pipelined SUMMA with decomposed gathers.
+
+    Phase 1 chain-gathers the full B column panel over ``axis_x`` (exposed:
+    there is nothing to compute against yet).  Phase 2 walks A's k-slabs
+    around the ``axis_y`` ring, issuing each hop BEFORE the partial multiply
+    against the matching slice of the B panel, so the permute hides under
+    the compute (the ring prefetch trick on the torus row)."""
+    local_fn = local_fn or local_matmul
+
+    def body(ab, bb):
+        bcol = gather_chain(bb, axis_x)                    # (K, N/qy)
+        qy = int(lax.psum(1, axis_y))
+        iy = lax.axis_index(axis_y)
+        ky = ab.shape[1]                                   # K / qy
+        perm = [(d, (d + 1) % qy) for d in range(qy)]
+        acc = jnp.zeros((ab.shape[0], bb.shape[1]), jnp.float32)
+        cur = ab
+        for s in range(qy):
+            nxt = None
+            if s < qy - 1:
+                with obs.span("dist.prefetch", comm="hidden"):
+                    nxt = _collectives.ppermute(cur, axis_y, perm)
+            src = (iy - s) % qy  # k-slab index of the resident A chunk
+            bslab = lax.dynamic_slice(
+                bcol, (src * ky, 0), (ky, bcol.shape[1]))
+            acc = acc + local_fn(cur, bslab, out_dtype=jnp.float32)
+            cur = nxt
+        return acc.astype(out_dtype)
+
+    return body
+
+
 def summa_matmul(a: jax.Array, b: jax.Array, *, mesh,
                  axis_x: str = "x", axis_y: str = "y",
-                 out_dtype=None) -> jax.Array:
-    """Global (M, K) x (K, N) matmul, SUMMA-scheduled over (axis_x, axis_y)."""
+                 out_dtype=None, overlap=None) -> jax.Array:
+    """Global (M, K) x (K, N) matmul, SUMMA-scheduled over (axis_x, axis_y).
+
+    ``overlap=False`` forces the staged body (monolithic tiled
+    all-gathers); ``overlap=True`` the one-hop gather-chain body; the
+    default lets the planner pick (see ``repro.plan.build_plan``)."""
     from repro.plan import build_plan, execute_plan
 
     plan = build_plan(
         a.shape[-2], b.shape[-1], a.shape[-1], mesh=mesh, strategy="summa",
         axes=(axis_x, axis_y), batch=tuple(a.shape[:-2]),
         a_dtype=a.dtype, b_dtype=b.dtype, out_dtype=out_dtype,
+        overlap=overlap,
     )
     return execute_plan(plan, a, b)

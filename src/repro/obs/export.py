@@ -42,6 +42,7 @@ def to_trace_events(recorder: Optional[Recorder] = None) -> Dict[str, Any]:
                 "strategy": ev.strategy, "group": ev.group,
                 "shard_words": ev.shard_words,
                 "perm_pairs": len(ev.perm) if ev.perm is not None else None,
+                "comm": ev.comm,
             },
         })
     for name, ts, tid, args in rec.instants:
@@ -82,14 +83,21 @@ def collective_multiset(recorder: Optional[Recorder] = None,
 
 
 def collective_totals(recorder: Optional[Recorder] = None) -> Dict[str, Dict]:
-    """Per-strategy per-kind collective counts and shard words."""
+    """Per-strategy per-kind collective counts and shard words.
+
+    ``hidden_words`` counts the subset issued as double-buffer prefetches
+    (``comm == "hidden"``); ``shard_words - hidden_words`` is the exposed
+    communication the overlap could not hide."""
     rec = recorder if recorder is not None else get_recorder()
     out: Dict[str, Dict] = {}
     for ev in rec.collectives:
         strat = out.setdefault(ev.strategy or "(untagged)", {})
-        kind = strat.setdefault(ev.kind, {"count": 0, "shard_words": 0})
+        kind = strat.setdefault(ev.kind, {"count": 0, "shard_words": 0,
+                                          "hidden_words": 0})
         kind["count"] += 1
         kind["shard_words"] += ev.shard_words
+        if ev.comm == "hidden":
+            kind["hidden_words"] += ev.shard_words
     return out
 
 

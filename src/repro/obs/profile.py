@@ -58,15 +58,31 @@ class MachineProfile:
         """Calibrated total seconds for an analytic ``dist.api.Estimate``:
         compute from the measured peak FLOPs, communication from the fitted
         α–β applied to the estimate's bytes and message count, combined
-        with the estimate's own overlap rule."""
+        with the estimate's own overlap rule.
+
+        When the estimate carries per-axis terms (``est.comm_by_axis``) AND
+        this profile has a fitted ``axis:{name}`` link class for *every*
+        axis in them, each axis's bytes/messages are priced with its own
+        α–β and summed -- heterogeneous multi-axis meshes rank correctly.
+        Otherwise the pooled ``link`` class prices the totals, preserving
+        the ``default_profile`` analytic-ranking identity."""
         from repro.core.cost import calibrated_total_s
 
         lp = self.link(link)
+        names = {n for n, _ in self.links}
+        terms = None
+        by_axis = getattr(est, "comm_by_axis", ())
+        if by_axis and all(f"axis:{ax}" in names for ax, _, _ in by_axis):
+            terms = tuple(
+                (self.link(f"axis:{ax}").alpha_s,
+                 self.link(f"axis:{ax}").bw_bytes_per_s, b, ms)
+                for ax, b, ms in by_axis)
         return calibrated_total_s(
             2.0 * est.m * est.n * est.k / max(est.tp, 1),
             est.comm_bytes, est.msgs,
             alpha_s=lp.alpha_s, bw_bytes_per_s=lp.bw_bytes_per_s,
-            peak_flops=self.peak_flops, overlapped=est.overlapped)
+            peak_flops=self.peak_flops, overlapped=est.overlapped,
+            comm_terms=terms)
 
     def to_json(self) -> Dict:
         return {

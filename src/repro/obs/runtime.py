@@ -89,6 +89,7 @@ class CollectiveEvent:
     shard_words: int
     perm: Optional[Perm] = None   # canonical, ppermute only
     strategy: str = ""            # ambient span tag at record time
+    comm: str = "exposed"         # "hidden" when issued as a prefetch
     ts_us: float = 0.0
     tid: int = 0
 
@@ -219,14 +220,18 @@ def span(name: str, **args):
 def record_collective(kind: str, group: int, shard_words: int,
                       perm=None) -> None:
     """Record one collective at the dist seam (no-op when disabled).
-    ``perm`` is canonicalized; the executing strategy is read off the
-    ambient span tags."""
+    ``perm`` is canonicalized; the executing strategy and the
+    exposed/hidden classification (``comm="hidden"`` inside the
+    double-buffered bodies' prefetch spans) are read off the ambient span
+    tags."""
     if not _ENABLED:
         return
+    tags = current_tags()
     _RECORDER.add_collective(CollectiveEvent(
         kind=kind, group=int(group), shard_words=int(shard_words),
         perm=canonical_perm(perm) if perm is not None else None,
-        strategy=str(current_tags().get("strategy", "")),
+        strategy=str(tags.get("strategy", "")),
+        comm=str(tags.get("comm", "exposed")),
         ts_us=_now_us(), tid=threading.get_ident()))
 
 

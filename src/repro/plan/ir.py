@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.core.schedule import TorusSchedule, cannon_schedule
-from repro.dist.api import Estimate, estimate
+from repro.dist.api import Estimate, estimate, overlap_capability
 
 Perm = Tuple[Tuple[int, int], ...]
 
@@ -137,6 +137,7 @@ class SchedulePlan:
       tiling       -- intra-device Z-order bits [iterated wreath product]
       pad_a/pad_b  -- block-multiple padding taking the problem onto the grid
       cost         -- the analytic Estimate that ranked this strategy
+      overlap      -- execute the double-buffered lowering [max(comp, comm)]
     """
 
     strategy: str
@@ -156,6 +157,7 @@ class SchedulePlan:
     torus: Optional[TorusProgram] = None
     tiling: TilingPlan = TilingPlan()
     cost: Optional[Estimate] = None
+    overlap: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -209,14 +211,16 @@ def rank_mesh_strategies(m: int, n: int, k: int, mesh,
     key is measured seconds -- the fitted α–β applied to each estimate's
     analytic bytes/message counts -- instead of the datasheet-constant
     ``total_s``; the estimates themselves (the word counts conformance
-    checks) are identical either way.
+    checks) are identical either way.  Each estimate carries the resolved
+    mesh-axis roles (``comm_by_axis``), so a profile with per-axis
+    ``axis:{name}`` link classes prices every term on its own link.
     """
     cands = mesh_candidates(mesh)
-    ests = [
-        estimate(s, m, n, k, mesh.size, dtype_bytes,
-                 grid=_grid_for(mesh, s, _plan_axes(mesh, s, None)))
-        for s in cands
-    ]
+    ests = []
+    for s in cands:
+        ax = _plan_axes(mesh, s, None)
+        ests.append(estimate(s, m, n, k, mesh.size, dtype_bytes,
+                             grid=_grid_for(mesh, s, ax), axes=ax))
     if profile is not None:
         key = lambda e: (profile.seconds(e), cands.index(e.strategy))  # noqa: E731
     else:
@@ -269,6 +273,7 @@ def build_plan(
     schedule: Optional[TorusSchedule] = None,
     tiling: Optional[TilingPlan] = None,
     profile=None,
+    overlap: Optional[bool] = None,
     use_cache: bool = True,
 ) -> SchedulePlan:
     """Plan a global (batch..., m, k) x (k, n) matmul on ``mesh``.
@@ -277,7 +282,12 @@ def build_plan(
     cost model (``strategy`` forces one; ``schedule`` forces a custom torus
     schedule; a calibrated ``profile`` -- ``repro.obs.MachineProfile`` --
     makes the ranking use measured seconds instead of datasheet constants,
-    without changing any plan's word counts).  Results are memoized -- see
+    without changing any plan's word counts).  ``overlap`` selects the
+    double-buffered lowering: ``None`` (default) lets the planner pick --
+    overlapped exactly when the cost model (calibrated when ``profile`` is
+    given) predicts ``max(compute, comm) < compute + comm`` strictly --
+    ``False`` forces the staged twin, ``True`` demands overlap and raises
+    for strategies with no overlapped body.  Results are memoized -- see
     ``repro.plan.cache``.  Under ``repro.obs`` tracing every call is a
     ``plan.build`` span and cache misses record their build time in the
     ``plan.build_us`` histogram.
@@ -291,7 +301,7 @@ def build_plan(
     key = (
         "plan", batch, m, n, k, jnp.dtype(a_dtype).name, jnp.dtype(b_dtype).name,
         out_dtype.name, mesh_fingerprint(mesh), strategy, axes, schedule, tiling,
-        profile,
+        profile, overlap,
     )
     with obs.span("plan.build", m=m, n=n, k=k, strategy=strategy or "auto"):
         if use_cache:
@@ -303,6 +313,7 @@ def build_plan(
             m, n, k, mesh=mesh, strategy=strategy, batch=batch,
             a_dtype=a_dtype, out_dtype=out_dtype, axes=axes,
             schedule=schedule, tiling=tiling, profile=profile,
+            overlap=overlap,
         )
         if obs.enabled():
             obs.histogram("plan.build_us").observe(
@@ -313,15 +324,52 @@ def build_plan(
     return plan
 
 
+def _resolve_overlap(strategy: str, grid, cost: Optional[Estimate],
+                     overlap: Optional[bool], profile) -> bool:
+    """Pick the executed variant: the caller's explicit choice (validated
+    against the lowering's capability), or -- when ``overlap`` is None --
+    the planner's: overlapped exactly when the cost model predicts a
+    strict ``max(compute, comm) < compute + comm`` win (calibrated seconds
+    when a profile is given; ties go to the staged body).  The ring chains
+    have no staged twin -- their fused one-hop programs are the overlap."""
+    capability = overlap_capability(strategy, grid)
+    if overlap is not None:
+        if overlap and not capability:
+            raise ValueError(
+                f"strategy {strategy!r} (grid={grid}) has no overlapped "
+                "lowering")
+        if not overlap and strategy in ("ring_ag", "ring_rs"):
+            raise ValueError(
+                f"{strategy} is intrinsically overlapped (the fused ring "
+                "chain has no staged twin)")
+        return bool(overlap)
+    if not capability:
+        return False
+    if strategy in ("ring_ag", "ring_rs"):
+        return True
+    if cost is None:
+        # custom torus schedules carry no estimate; any torus program
+        # double-buffers, and overlap never loses words -- default to it
+        return True
+    staged = dataclasses.replace(cost, overlapped=False)
+    over = dataclasses.replace(cost, overlapped=True)
+    if profile is not None:
+        return profile.seconds(over) < profile.seconds(staged)
+    return over.total_s < staged.total_s
+
+
 def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
                          out_dtype, axes, schedule, tiling,
-                         profile=None) -> SchedulePlan:
+                         profile=None, overlap=None) -> SchedulePlan:
     flat_m = m * math.prod(batch) if batch else m
     dtype_bytes = jnp.dtype(a_dtype).itemsize
     cost = None
     if schedule is not None and mesh is None:
         raise ValueError("executing a TorusSchedule requires a mesh")
     if (mesh is None or mesh.size == 1) and schedule is None:
+        if overlap:
+            raise ValueError(
+                "local/single-device plans have no overlapped lowering")
         return SchedulePlan(
             strategy="local", m=m, n=n, k=k, batch=tuple(batch),
             out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
@@ -331,8 +379,11 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
     if schedule is not None:
         strategy = strategy or "torus"
         ax = _plan_axes(mesh, "cannon", axes)
+        resolved = _resolve_overlap("cannon", (schedule.q, schedule.q),
+                                    None, overlap, profile)
         return _torus_plan(m, n, k, batch, out_dtype, mesh, ax, schedule,
-                           tiling, cost=None, strategy=strategy)
+                           tiling, cost=None, strategy=strategy,
+                           overlap=resolved)
     if strategy is None:
         ranked = rank_mesh_strategies(flat_m, n, k, mesh, dtype_bytes,
                                       profile=profile)
@@ -341,13 +392,20 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
     elif strategy in _EXECUTABLE:
         ax_cost = _plan_axes(mesh, strategy, axes)
         cost = estimate(strategy, flat_m, n, k, mesh.size, dtype_bytes,
-                        grid=_grid_for(mesh, strategy, ax_cost))
+                        grid=_grid_for(mesh, strategy, ax_cost),
+                        axes=ax_cost)
     else:
         raise ValueError(
             f"cannot plan strategy {strategy!r}; executable strategies are "
             f"{sorted(_EXECUTABLE)}")
 
     ax = _plan_axes(mesh, strategy, axes)
+    resolved = _resolve_overlap(strategy, _grid_for(mesh, strategy, ax),
+                                cost, overlap, profile)
+    if cost is not None:
+        # the plan's cost prices the variant it will execute, so
+        # ``plan.cost.overlapped == plan.overlap`` always holds
+        cost = dataclasses.replace(cost, overlapped=resolved)
     if strategy == "local":
         return SchedulePlan(
             strategy="local", m=m, n=n, k=k, batch=tuple(batch),
@@ -357,7 +415,8 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
     if strategy == "cannon":
         q = mesh.shape[ax[0]]
         return _torus_plan(m, n, k, batch, out_dtype, mesh, ax,
-                           cannon_schedule(q), tiling, cost, strategy="cannon")
+                           cannon_schedule(q), tiling, cost,
+                           strategy="cannon", overlap=resolved)
     if strategy == "summa":
         qx, qy = mesh.shape[ax[0]], mesh.shape[ax[1]]
         return SchedulePlan(
@@ -365,7 +424,7 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
             out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
             axes=ax, grid=(qx, qy),
             pad_a=(qx, qx * qy), pad_b=(qx * qy, qy),
-            tiling=tiling, cost=cost,
+            tiling=tiling, cost=cost, overlap=resolved,
         )
     if strategy == "cannon25d":
         c = mesh.shape[ax[0]]
@@ -379,7 +438,7 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
             axes=ax, grid=(c, q, q), replication=c,
             pad_a=(q, c * q), pad_b=(c * q, q),
             schedule=sched, torus=TorusProgram.from_schedule(sched),
-            tiling=tiling, cost=cost,
+            tiling=tiling, cost=cost, overlap=resolved,
         )
     if strategy == "pod25d":
         c = mesh.shape[ax[0]]
@@ -391,14 +450,14 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
                 mesh_fp=mesh_fingerprint(mesh),
                 axes=ax, grid=(c, qx, qy), replication=c,
                 pad_a=(qx, c * qx * qy), pad_b=(c * qx * qy, qy),
-                tiling=tiling, cost=cost,
+                tiling=tiling, cost=cost, overlap=resolved,
             )
         return SchedulePlan(
             strategy="pod25d", m=m, n=n, k=k, batch=tuple(batch),
             out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
             axes=ax[:1], grid=(c,), replication=c,
             pad_a=(1, c), pad_b=(c, 1),
-            tiling=tiling, cost=cost,
+            tiling=tiling, cost=cost, overlap=resolved,
         )
     if strategy in ("ring_ag", "ring_rs"):
         t = 1
@@ -410,13 +469,13 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
             strategy=strategy, m=m, n=n, k=k, batch=tuple(batch),
             out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
             axes=ax, grid=(t,), pad_a=pad_a, pad_b=pad_b,
-            tiling=tiling, cost=cost,
+            tiling=tiling, cost=cost, overlap=resolved,
         )
     raise ValueError(f"cannot plan strategy {strategy!r}")
 
 
 def _torus_plan(m, n, k, batch, out_dtype, mesh, ax, schedule, tiling, cost,
-                *, strategy) -> SchedulePlan:
+                *, strategy, overlap: bool = False) -> SchedulePlan:
     q = schedule.q
     if mesh.shape[ax[0]] != q or mesh.shape[ax[1]] != q:
         raise ValueError(
@@ -429,5 +488,5 @@ def _torus_plan(m, n, k, batch, out_dtype, mesh, ax, schedule, tiling, cost,
         out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
         axes=tuple(ax[:2]), grid=(q, q), pad_a=(q, q), pad_b=(q, q),
         schedule=schedule, torus=TorusProgram.from_schedule(schedule),
-        tiling=tiling, cost=cost,
+        tiling=tiling, cost=cost, overlap=overlap,
     )

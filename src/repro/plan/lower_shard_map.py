@@ -23,11 +23,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro import obs
 from repro.dist._util import pad_to
-from repro.dist.cannon import torus_program_body
+from repro.dist.cannon import (torus_program_body,
+                               torus_program_body_overlapped)
 from repro.dist.pod25d import (cannon25d_body, pod25d_slab_body,
-                               pod25d_summa_body)
+                               pod25d_summa_body,
+                               pod25d_summa_overlapped_body)
 from repro.dist.ring import ring_ag_matmul, ring_rs_matmul
-from repro.dist.summa import summa_body
+from repro.dist.summa import summa_body, summa_overlapped_body
 from repro.jax_compat import shard_map
 
 from .ir import SchedulePlan
@@ -70,7 +72,8 @@ def lower_shard_map(plan: SchedulePlan):
     call pure dictionary lookups down to the jit boundary.  Plans built on
     unhashable duck-typed meshes (tests) lower uncached."""
     _notify_lower(plan)
-    with obs.span("plan.lower", strategy=plan.strategy):
+    with obs.span("plan.lower", strategy=plan.strategy,
+                  overlap=plan.overlap):
         try:
             return _lower_shard_map_cached(plan)
         except TypeError:
@@ -94,7 +97,9 @@ def _lower_shard_map(plan: SchedulePlan):
     if plan.torus is not None and plan.strategy != "cannon25d":
         # cannon / any valid 2-D torus solution: execute the reified program
         ax, ay = plan.axes
-        body = torus_program_body(plan.torus, ax, ay, local_fn=local_fn)
+        body_fn = (torus_program_body_overlapped if plan.overlap
+                   else torus_program_body)
+        body = body_fn(plan.torus, ax, ay, local_fn=local_fn)
         f = shard_map(
             lambda ab, bb: body(ab, bb).astype(out_dtype),
             mesh=mesh,
@@ -105,8 +110,9 @@ def _lower_shard_map(plan: SchedulePlan):
 
     if plan.strategy == "summa":
         ax, ay = plan.axes
+        summa_fn = summa_overlapped_body if plan.overlap else summa_body
         f = shard_map(
-            summa_body(ax, ay, out_dtype, local_fn=local_fn),
+            summa_fn(ax, ay, out_dtype, local_fn=local_fn),
             mesh=mesh,
             in_specs=(P(ax, ay), P(ax, ay)),
             out_specs=P(ax, ay),
@@ -117,7 +123,7 @@ def _lower_shard_map(plan: SchedulePlan):
         pod, ax, ay = plan.axes
         f = shard_map(
             cannon25d_body(pod, ax, ay, plan.torus, out_dtype,
-                           local_fn=local_fn),
+                           local_fn=local_fn, overlap=plan.overlap),
             mesh=mesh,
             in_specs=(P(ax, (pod, ay)), P((pod, ax), ay)),
             out_specs=P(ax, ay),
@@ -128,8 +134,10 @@ def _lower_shard_map(plan: SchedulePlan):
         pod = plan.axes[0]
         if len(plan.axes) >= 3:
             ax, ay = plan.axes[1], plan.axes[2]
+            pod_fn = (pod25d_summa_overlapped_body if plan.overlap
+                      else pod25d_summa_body)
             f = shard_map(
-                pod25d_summa_body(pod, ax, ay, out_dtype, local_fn=local_fn),
+                pod_fn(pod, ax, ay, out_dtype, local_fn=local_fn),
                 mesh=mesh,
                 in_specs=(P(ax, (pod, ay)), P((pod, ax), ay)),
                 out_specs=P(ax, ay),
@@ -195,7 +203,7 @@ def execute_plan(plan: SchedulePlan, a: jax.Array, b: jax.Array) -> jax.Array:
     # the span covers tracing of the shard_map body, so every collective
     # recorded at the dist seam inherits the strategy tag
     with obs.span("plan.execute", strategy=plan.strategy,
-                  m=plan.m, n=plan.n, k=plan.k):
+                  overlap=plan.overlap, m=plan.m, n=plan.n, k=plan.k):
         if a.ndim == 2 and b.ndim == 2:
             return run(a, b)
         if a.ndim > 2 and b.ndim == 2:

@@ -35,8 +35,8 @@ from repro.core.cost import bandwidth_lower_bound, torus_schedule_cost
 from repro.core.schedule import (movement_equations_hold, perm_is_bijection,
                                  perm_translation)
 
-from .trace import (CollectiveRecord, Trace, padded_dims, torus_single_copy_ok,
-                    trace_plan)
+from .trace import (CollectiveRecord, Trace, canonical_perm, padded_dims,
+                    torus_single_copy_ok, trace_plan)
 
 
 class ConformanceError(AssertionError):
@@ -134,6 +134,7 @@ def memory_bound_words(plan) -> float:
     share_a = mp * kp / max(p, 1)
     share_b = kp * np_ / max(p, 1)
     share_c = mp * np_ / max(p, 1)
+    overlap = bool(getattr(plan, "overlap", False))
     if plan.strategy in ("summa", "pod25d"):
         if len(plan.grid) >= 3:
             c, qx, qy = plan.grid
@@ -141,6 +142,12 @@ def memory_bound_words(plan) -> float:
             c, qx, qy = plan.grid[0], 1, 1
         else:
             c, (qx, qy) = 1, plan.grid
+        if overlap and (qx > 1 or qy > 1):
+            # decomposed-gather variant: the full B column panel plus
+            # double-buffered A/B shards, the per-layer fp32 C partial,
+            # and the resident B k-slab (the chain bodies' working set)
+            return float(qx * share_b + 2 * share_a + 2 * share_b
+                         + c * share_c + (kp // (c * qy)) * (np_ // qy))
         return float(qy * share_a + qx * share_b + c * share_c)
     if plan.strategy == "ring_ag":
         # fused: only one x-chunk resident per step -- true single copy
@@ -150,7 +157,14 @@ def memory_bound_words(plan) -> float:
         # t-fold replication of C
         t = plan.grid[0] if plan.grid else p
         return float(share_a + share_b + t * share_c)
-    return float(max(plan.replication, 1)) * (share_a + share_b + share_c)
+    bound = float(max(plan.replication, 1)) * (share_a + share_b + share_c)
+    if overlap and plan.torus is not None:
+        # double buffering keeps one extra copy of each moving operand
+        if canonical_perm(plan.torus.step_a or ()):
+            bound += share_a
+        if canonical_perm(plan.torus.step_b or ()):
+            bound += share_b
+    return bound
 
 
 def compare_records(expected: Sequence[CollectiveRecord],
@@ -342,6 +356,16 @@ def matrix_cells(num_devices: int):
     return [c for c in _CATALOG if math.prod(c[1]) <= num_devices]
 
 
+def _overlap_modes(strategy: str, shape: Tuple[int, ...]):
+    """Overlap dimension of one matrix cell: strategies with both lowerings
+    run staged AND overlapped; the rest run their single (default) form."""
+    if strategy in ("cannon", "summa", "cannon25d"):
+        return (False, True)
+    if strategy == "pod25d" and len(shape) >= 3:
+        return (False, True)
+    return (None,)
+
+
 def run_matrix(*, measure: bool = True, cases: Optional[Sequence[str]] = None,
                dtypes: Optional[Sequence] = None,
                num_devices: Optional[int] = None) -> List[Dict]:
@@ -365,23 +389,28 @@ def run_matrix(*, measure: bool = True, cases: Optional[Sequence[str]] = None,
         for case in cases:
             spec = CASES[case]
             for dtype in dtypes:
-                row = {"strategy": strategy, "mesh": shape, "case": case,
-                       "dtype": jnp.dtype(dtype).name, "ok": True,
-                       "error": "", "words_per_node": 0.0}
-                try:
-                    key = (shape, names)
-                    if key not in meshes:
-                        meshes[key] = jax.make_mesh(
-                            shape, names, devices=devs[:math.prod(shape)])
-                    plan = build_plan(
-                        spec["m"], spec["n"], spec["k"], mesh=meshes[key],
-                        strategy=strategy, batch=spec["batch"],
-                        a_dtype=dtype, b_dtype=dtype,
-                    )
-                    rep = check(plan, measure=measure)
-                    row["words_per_node"] = rep.words_per_node
-                except Exception as e:  # noqa: BLE001 -- matrix reports all
-                    row["ok"] = False
-                    row["error"] = f"{type(e).__name__}: {e}"
-                rows.append(row)
+                for mode in _overlap_modes(strategy, shape):
+                    row = {"strategy": strategy, "mesh": shape,
+                           "case": case, "dtype": jnp.dtype(dtype).name,
+                           "overlap": bool(mode), "ok": True,
+                           "error": "", "words_per_node": 0.0}
+                    try:
+                        key = (shape, names)
+                        if key not in meshes:
+                            meshes[key] = jax.make_mesh(
+                                shape, names,
+                                devices=devs[:math.prod(shape)])
+                        plan = build_plan(
+                            spec["m"], spec["n"], spec["k"],
+                            mesh=meshes[key], strategy=strategy,
+                            batch=spec["batch"], a_dtype=dtype,
+                            b_dtype=dtype, overlap=mode,
+                        )
+                        row["overlap"] = bool(plan.overlap)
+                        rep = check(plan, measure=measure)
+                        row["words_per_node"] = rep.words_per_node
+                    except Exception as e:  # noqa: BLE001 -- reports all
+                        row["ok"] = False
+                        row["error"] = f"{type(e).__name__}: {e}"
+                    rows.append(row)
     return rows

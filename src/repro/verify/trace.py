@@ -166,8 +166,29 @@ def trace_plan(plan) -> Trace:
     strategy = plan.strategy
     mesh_size = int(plan.mesh.size) if plan.mesh is not None else 1
     grid = tuple(plan.grid)
+    overlap = bool(getattr(plan, "overlap", False))
     recs: List[CollectiveRecord] = []
     peak = 0.0
+
+    def _ring(g: int) -> Perm:
+        return canonical_perm([(d, (d + 1) % g) for d in range(g)])
+
+    def _chain(group: int, shard: int, var: str) -> List[CollectiveRecord]:
+        # the one-hop decomposition of a tiled all_gather: (g - 1) ring
+        # ppermutes of one shard each -- identical words per device
+        return [CollectiveRecord("ppermute", group, shard, _ring(group),
+                                 "gather", var)
+                for _ in range(group - 1)]
+
+    def _torus_overlap_extra(prog, a_blk: int, b_blk: int) -> float:
+        # the double-buffered body keeps step k and the prefetched step
+        # k + 1 copy live together -- one extra block per moving operand
+        extra = 0.0
+        if canonical_perm(prog.step_a or ()):
+            extra += a_blk
+        if canonical_perm(prog.step_b or ()):
+            extra += b_blk
+        return extra
 
     if strategy == "local" or mesh_size <= 1:
         peak = float(mp * kp + kp * np_ + mp * np_)
@@ -181,17 +202,30 @@ def trace_plan(plan) -> Trace:
         c_blk = (mp // q) * (np_ // q)
         recs = _torus_records(plan.torus, a_blk, b_blk, c_blk, q * q)
         peak = float(a_blk + b_blk + c_blk)
+        if overlap:
+            peak += _torus_overlap_extra(plan.torus, a_blk, b_blk)
     elif strategy == "summa":
         qx, qy = grid
         a_shard = (mp // qx) * (kp // qy)
         b_shard = (kp // qx) * (np_ // qy)
-        recs = [
-            CollectiveRecord("all_gather", qy, a_shard, None, "gather", "A"),
-            CollectiveRecord("all_gather", qx, b_shard, None, "gather", "B"),
-        ]
-        # gathered row panel + column panel + output block
-        peak = float((mp // qx) * kp + kp * (np_ // qy)
-                     + (mp // qx) * (np_ // qy))
+        if overlap:
+            # decomposed gathers: B chain-gathered over the columns, A
+            # ring-walked over the rows -- same words, one-hop pieces
+            recs = _chain(qx, b_shard, "B") + _chain(qy, a_shard, "A")
+            # B panel + double-buffered A and B shards + fp32 acc + b slab
+            peak = float(qx * b_shard + 2 * a_shard + 2 * b_shard
+                         + (mp // qx) * (np_ // qy)
+                         + (kp // qy) * (np_ // qy))
+        else:
+            recs = [
+                CollectiveRecord("all_gather", qy, a_shard, None,
+                                 "gather", "A"),
+                CollectiveRecord("all_gather", qx, b_shard, None,
+                                 "gather", "B"),
+            ]
+            # gathered row panel + column panel + output block
+            peak = float((mp // qx) * kp + kp * (np_ // qy)
+                         + (mp // qx) * (np_ // qy))
     elif strategy == "cannon25d":
         c, q, _ = grid
         a_blk = (mp // q) * (kp // (c * q))
@@ -200,21 +234,30 @@ def trace_plan(plan) -> Trace:
         recs = _torus_records(plan.torus, a_blk, b_blk, c_blk, q * q)
         recs.append(CollectiveRecord("psum", c, c_blk, None, "reduce", "C"))
         peak = float(a_blk + b_blk + c_blk)
+        if overlap:
+            peak += _torus_overlap_extra(plan.torus, a_blk, b_blk)
     elif strategy == "pod25d":
         if len(grid) >= 3:
             c, qx, qy = grid
             a_shard = (mp // qx) * (kp // (c * qy))
             b_shard = (kp // (c * qx)) * (np_ // qy)
             c_shard = (mp // qx) * (np_ // qy)
-            recs = [
-                CollectiveRecord("all_gather", qy, a_shard, None,
-                                 "gather", "A"),
-                CollectiveRecord("all_gather", qx, b_shard, None,
-                                 "gather", "B"),
-                CollectiveRecord("psum", c, c_shard, None, "reduce", "C"),
-            ]
-            peak = float((mp // qx) * (kp // c) + (kp // c) * (np_ // qy)
-                         + c_shard)
+            if overlap:
+                recs = (_chain(qx, b_shard, "B") + _chain(qy, a_shard, "A")
+                        + [CollectiveRecord("psum", c, c_shard, None,
+                                            "reduce", "C")])
+                peak = float(qx * b_shard + 2 * a_shard + 2 * b_shard
+                             + c_shard + (kp // (c * qy)) * (np_ // qy))
+            else:
+                recs = [
+                    CollectiveRecord("all_gather", qy, a_shard, None,
+                                     "gather", "A"),
+                    CollectiveRecord("all_gather", qx, b_shard, None,
+                                     "gather", "B"),
+                    CollectiveRecord("psum", c, c_shard, None, "reduce", "C"),
+                ]
+                peak = float((mp // qx) * (kp // c) + (kp // c) * (np_ // qy)
+                             + c_shard)
         else:
             c = grid[0]
             recs = [CollectiveRecord("psum", c, mp * np_, None,
