@@ -360,6 +360,75 @@ def bench_overlap_vs_staged() -> List[Row]:
     return rows
 
 
+# -- hierarchical fat-tree vs flat pod execution ------------------------------
+
+_FATTREE_PROBE = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=" + sys.argv[1])
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+sys.path.insert(0, "src")
+from repro.plan import build_plan
+from repro.plan.lower_shard_map import _lower_shard_map
+
+n = 512
+devs = np.array(jax.devices())
+mesh = jax.make_mesh((2, 2, 2), ("tree", "x", "y"), devices=devs[:8])
+rng = np.random.default_rng(0)
+a = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+b = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+ref = np.asarray(a @ b)
+out = {"n": n, "mesh": "2x2x2"}
+for name in ("fattree", "pod25d"):
+    plan = build_plan(n, n, n, mesh=mesh, strategy=name,
+                      a_dtype=a.dtype, b_dtype=b.dtype, use_cache=False)
+    f = jax.jit(_lower_shard_map(plan))
+    got = np.asarray(jax.block_until_ready(f(a, b)))
+    out[name + "_ok"] = bool(np.allclose(got, ref, atol=1e-2))
+    best = float("inf")
+    for _ in range(7):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(a, b))
+        best = min(best, time.perf_counter() - t0)
+    out[name + "_us"] = best * 1e6
+print("PROBE_JSON:" + json.dumps(out))
+"""
+
+
+def bench_fattree_vs_flat() -> List[Row]:
+    """The hierarchical fat-tree lowering against the flat 2.5D pod plan on
+    the same pod-of-pods mesh (2 pods x 2x2, 8 forced-host devices): both
+    must be numerically correct; the timings contrast the recursive
+    tree-axis exchange program with the replicate--reduce program.  No
+    speed guard -- on host CPU the two are link-indistinguishable; the
+    ranking between them is the calibrated profile's job (see
+    tests/test_fattree_exec.py's flip pin)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _FATTREE_PROBE, "8"],
+        capture_output=True, text=True, env=env, cwd=_repo_root(),
+        timeout=600,
+    )
+    out = None
+    for line in res.stdout.splitlines():
+        if line.startswith("PROBE_JSON:"):
+            out = json.loads(line[len("PROBE_JSON:"):])
+    if out is None:
+        raise RuntimeError(
+            f"fattree probe failed:\n{res.stdout[-2000:]}\n"
+            f"{res.stderr[-2000:]}")
+    if not (out["fattree_ok"] and out["pod25d_ok"]):
+        raise RuntimeError(f"fattree-vs-flat numeric mismatch: {out}")
+    ft, flat = out["fattree_us"], out["pod25d_us"]
+    return [
+        ("fattree_vs_flat_2x2x2", ft,
+         f"fattree_us={ft:.1f};pod25d_us={flat:.1f};"
+         f"ratio={ft / max(flat, 1e-9):.2f};n={out['n']};ok=True"),
+    ]
+
+
 # -- subprocess probe ----------------------------------------------------------
 
 _PROBE = r"""
@@ -445,6 +514,7 @@ ALL_BENCHES = (
     bench_strategy_choice,
     bench_plan_dispatch,
     bench_overlap_vs_staged,
+    bench_fattree_vs_flat,
 )
 
 # tiny-shape subset for CI (`benchmarks/run.py --smoke`): no big compiles,
@@ -456,4 +526,5 @@ SMOKE_BENCHES = (
     bench_strategy_choice,
     bench_plan_dispatch,
     bench_overlap_vs_staged,
+    bench_fattree_vs_flat,
 )

@@ -20,7 +20,29 @@ and each level contributes an independent time bit tau_l = i_l ^ j_l ^ k_l.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+import functools
+from typing import Dict, Tuple
+
+
+def tree_exchange_mask(t: int) -> int:
+    """XOR mask of the inter-pod exchange between super-steps t and t+1.
+
+    The recursive schedule walks contraction slabs in the reflected-Gray
+    order j = p ^ t, so the slab resident on pod p advances by
+    ``t ^ (t + 1)`` -- always of the form 2^(b+1) - 1 where b is the number
+    of trailing one-bits of t.  The mask's highest bit is the deepest tree
+    level the exchange crosses; the root (level log2(s)) is crossed exactly
+    once, at t = s/2 - 1."""
+    return t ^ (t + 1)
+
+
+def tree_exchange_perm(s: int, t: int) -> Tuple[Tuple[int, int], ...]:
+    """The pod-axis ppermute realizing the exchange after super-step t: the
+    XOR-mask involution d -> d ^ mask on the s pods (pairs swap, so the
+    permutation is its own inverse -- every pod both sends and receives its
+    A slab shard in one round)."""
+    mask = tree_exchange_mask(t)
+    return tuple((d, d ^ mask) for d in range(s))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,14 +102,11 @@ class FatTreeSchedule:
         return proc
 
     # communication accounting ----------------------------------------------
-    def link_traffic(self) -> Dict[int, int]:
-        """Words crossing links at each fat-tree level, summed over the run.
-
-        Level L (1 = leaf links, 2d = top) is crossed by a message whose
-        source and destination processors first differ at bit (L-1); a
-        message crossing level L transits 2 links at every level <= L on its
-        up-and-down path; we count *words x links* per level, matching the
-        paper's per-level accounting."""
+    @functools.cached_property
+    def _link_traffic(self) -> Dict[int, int]:
+        """The O(n^3 . steps) traffic sweep, computed once per schedule
+        (``link_traffic``/``top_level_words``/``level_words`` all read this
+        cache; d=3 conformance sweeps assert against it repeatedly)."""
         traffic = {lvl: 0 for lvl in range(1, 2 * self.d + 1)}
         n = self.n
         for time in range(self.num_steps - 1):
@@ -101,13 +120,32 @@ class FatTreeSchedule:
                             continue
                         top = (src ^ dst).bit_length()  # highest differing bit+1
                         for lvl in range(1, top + 1):
-                            traffic[lvl] += 2 if lvl < top else 2
+                            # a message transits 2 links (up + down) at every
+                            # level of its path, including the turning level
+                            traffic[lvl] += 2
         return traffic
+
+    def link_traffic(self) -> Dict[int, int]:
+        """Words crossing links at each fat-tree level, summed over the run.
+
+        Level L (1 = leaf links, 2d = top) is crossed by a message whose
+        source and destination processors first differ at bit (L-1); a
+        message crossing level L transits 2 links at every level <= L on its
+        up-and-down path; we count *words x links* per level, matching the
+        paper's per-level accounting.  Returns a fresh dict; the sweep is
+        cached per schedule."""
+        return dict(self._link_traffic)
+
+    def level_words(self, level: int) -> int:
+        """Words (not words x links) crossing ``level`` over the whole run:
+        each word transits 2 links at every level of its path, so the word
+        count is half the per-level link traffic."""
+        return self._link_traffic[level] // 2
 
     def top_level_words(self) -> int:
         """Words of A+B crossing the top-level (2d) link over the whole run;
         the paper's claim: n^2 for A (and none for B or C)."""
-        return self.link_traffic()[2 * self.d] // 2  # 2 link-transits per word
+        return self.level_words(2 * self.d)
 
     def validate(self) -> bool:
         """Injectivity of f and the 3-words memory bound."""

@@ -32,6 +32,7 @@ from .api import (Estimate, applicable_strategies, choose, estimate,  # noqa: E4
                   symmetric_matmul)
 from .cannon import (cannon_matmul, executed_shift_vectors,  # noqa: E402
                      lowered_plan, torus_body, torus_schedule_matmul)
+from .fattree import fattree_matmul  # noqa: E402
 from .local import local_matmul  # noqa: E402
 from .pod25d import cannon25d_matmul, pod25d_matmul  # noqa: E402
 from .ring import ring_ag_matmul, ring_rs_matmul  # noqa: E402
@@ -40,7 +41,8 @@ from .summa import summa_matmul  # noqa: E402
 __all__ = [
     "Estimate", "applicable_strategies", "choose", "estimate",
     "symmetric_matmul", "cannon_matmul", "executed_shift_vectors",
-    "lowered_plan", "torus_body", "torus_schedule_matmul", "local_matmul",
+    "fattree_matmul", "lowered_plan", "torus_body", "torus_schedule_matmul",
+    "local_matmul",
     "cannon25d_matmul", "pod25d_matmul", "pad_to", "ring_ag_matmul",
     "ring_rs_matmul", "summa_matmul",
 ]

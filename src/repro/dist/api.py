@@ -28,7 +28,7 @@ import jax
 from repro.core import cost as _cost
 
 STRATEGIES = (
-    "cannon", "summa", "cannon25d", "pod25d",
+    "cannon", "summa", "cannon25d", "pod25d", "fattree",
     "ring_ag", "ring_rs", "xla_ag", "xla_rs", "local",
 )
 
@@ -49,6 +49,15 @@ class Estimate:
     supplies the resolved axis roles -- the hook a calibrated profile with
     per-axis ``axis:{name}`` link classes prices each term with its own
     α–β (empty when axes are unknown or the strategy flattens them).
+
+    ``tree_level_words`` (hierarchical strategies only) is the analytic
+    per-level traffic of the inter-pod tree axis: entry l-1 is the
+    mesh-wide *element* count (dtype-agnostic words, the conformance
+    convention) crossing tree level l (1 = leaf pairs, last = root) over
+    the whole run.  For the fat-tree schedule level l is crossed by the
+    s / 2^(l-1) - 1 exchanges whose Gray mask reaches bit l-1, each moving
+    all of A once -- so the root entry is exactly m*k, the paper's "n^2
+    words of A cross the top link".
     """
 
     strategy: str
@@ -62,6 +71,7 @@ class Estimate:
     overlapped: bool
     msgs: int = 0
     comm_by_axis: Tuple[Tuple[str, float, int], ...] = ()
+    tree_level_words: Tuple[float, ...] = ()
 
     @property
     def total_s(self) -> float:
@@ -75,8 +85,10 @@ def overlap_capability(strategy: str, grid=None) -> bool:
     body: the ring chains are intrinsically overlapped, the torus family
     prefetches step k+1's A/B permutes under step k's multiply, and SUMMA /
     3-axis pod25d run their gathers as pipelined one-hop chains.  The
-    1-axis pod25d slab program (``grid == (c,)``) and the XLA-collective /
-    local baselines have no overlapped variant."""
+    1-axis pod25d slab program (``grid == (c,)``), the hierarchical
+    fat-tree program (each super-step's gather feeds the slab multiply it
+    precedes -- no independent round to hide it under), and the
+    XLA-collective / local baselines have no overlapped variant."""
     if strategy in ("ring_ag", "ring_rs", "cannon", "cannon25d", "summa"):
         return True
     if strategy == "pod25d":
@@ -100,6 +112,19 @@ def _pod_factor(tp: int) -> Optional[tuple]:
             best = (q, c)
             break
     return best
+
+
+def _tree_factor(tp: int) -> tuple:
+    """Canonical (s, q) with tp = s * q^2, s a power of two >= 2, for
+    grid-less fat-tree estimates (mesh-aware callers always pass the real
+    grid); degrades to trivial intra-pod axes when tp has no square
+    cofactor."""
+    for s in (2, 4, 8):
+        if tp % s == 0:
+            q = _square_side(tp // s)
+            if q:
+                return s, q
+    return 2, max(int(math.isqrt(max(tp // 2, 1))), 1)
 
 
 def estimate(strategy: str, m: int, n: int, k: int, tp: int,
@@ -138,6 +163,7 @@ def estimate(strategy: str, m: int, n: int, k: int, tp: int,
         overlapped = bool(overlap)
     compute_s = 2.0 * m * n * k / tp / _cost.PEAK_FLOPS_BF16
     axis_terms = []
+    tree_levels: Tuple[float, ...] = ()
     if strategy == "local" or tp == 1:
         comm_bytes = 0.0
         msgs = 0
@@ -196,13 +222,40 @@ def estimate(strategy: str, m: int, n: int, k: int, tp: int,
                           (axes[0], reduce_bytes, 2 * (c - 1))]
         elif axes is not None and len(axes) == 1:
             axis_terms = [(axes[0], comm_bytes, msgs)]
+    elif strategy == "fattree":
+        if grid is not None:
+            s = grid[0]
+            qx = grid[1] if len(grid) > 1 else 1
+            qy = grid[2] if len(grid) > 2 else qx
+        else:
+            s, q = _tree_factor(tp)
+            qx = qy = q
+        # inter-pod: s - 1 XOR exchanges of each device's A slab shard;
+        # intra-pod: per super-step column gather of the slab shard plus
+        # one hoisted row gather of the stationary B panel
+        a_exch = dtype_bytes * (s - 1) * (m / qx) * (k / (s * qy))
+        a_gather = dtype_bytes * s * (qy - 1) * (m / qx) * (k / (s * qy))
+        b_gather = dtype_bytes * (qx - 1) * (k / qx) * (n / (s * qy))
+        comm_bytes = a_exch + a_gather + b_gather
+        msgs = (s - 1) + s * (qy - 1) + (qx - 1)
+        if axes is not None and len(axes) >= 3:
+            axis_terms = [(axes[0], a_exch, s - 1),
+                          (axes[2], a_gather, s * (qy - 1)),
+                          (axes[1], b_gather, qx - 1)]
+        # per-level tree traffic (mesh-wide element words): level l is
+        # crossed by the s/2^(l-1) - 1 exchanges whose mask reaches bit
+        # l-1, and each exchange moves all m*k words of A once
+        dt = max(s.bit_length() - 1, 1)
+        tree_levels = tuple(
+            float((s // (1 << (lvl - 1)) - 1) * m * k)
+            for lvl in range(1, dt + 1))
     else:  # pragma: no cover
         raise AssertionError(strategy)
     comm_s = comm_bytes / _cost.ICI_BW
     comm_by_axis = tuple(
         (str(a), float(b), int(ms)) for a, b, ms in axis_terms)
     return Estimate(strategy, m, n, k, tp, compute_s, comm_s, comm_bytes,
-                    overlapped, msgs, comm_by_axis)
+                    overlapped, msgs, comm_by_axis, tree_levels)
 
 
 def applicable_strategies(tp: int) -> tuple:

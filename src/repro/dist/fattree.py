@@ -1,0 +1,94 @@
+"""Hierarchical fat-tree lowering: the paper's Sec.-4.2 recursive schedule
+on a pod-of-pods machine.
+
+The mesh carries one inter-pod **tree** axis (s pods, s a power of two --
+the DCN dimension) and an intra-pod (qx, qy) torus pair.  The roles follow
+the wreath recursion: C and B column panels are *stationary* per pod (pod p
+owns output/operand column block p), while A's contraction slabs walk the
+tree axis in the reflected-Gray XOR order
+
+    slab on pod p at super-step t  =  p ^ t
+
+so the exchange between steps is the involution ``d -> d ^ (t ^ (t+1))``
+(``repro.core.fattree.tree_exchange_perm``).  The mask's highest bit is the
+deepest tree level crossed: the root is crossed exactly once (at
+t = s/2 - 1), reproducing the paper's "only A crosses the top link, n^2
+words total" claim level by level -- ``repro.verify`` checks the executed
+per-level words against both the analytic formula and the k-bit projection
+of ``FatTreeSchedule`` itself.
+
+Within a pod each super-step is one broadcast step: B's column panel is
+gathered over the rows *once* (hoisted -- B never moves again),
+A's resident slab shard is gathered over the columns per step, and the
+matching B k-slab is sliced out with the traced slab index.  The
+``fattree_body`` function is the lowering rule consumed by
+``repro.plan.lower_shard_map``; ``fattree_matmul`` is a facade over the
+plan engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.fattree import tree_exchange_perm
+
+from . import _collectives
+from .local import local_matmul
+
+
+def fattree_body(tree_axis: str, axis_x: str, axis_y: str, s: int,
+                 out_dtype, local_fn=None):
+    """shard_map body for the recursive fat-tree schedule.
+
+    Per-device operands (specs ``P(x, (tree, y))`` for both A and B):
+
+      ab -- (M/qx, K/(s*qy)): pod p's contraction-slab shard of A
+      bb -- (K/qx,  N/(s*qy)): the stationary column panel shard of B
+
+    The body runs s super-steps; at step t pod p multiplies A slab
+    ``p ^ t`` against the matching k-rows of its gathered B panel, then
+    exchanges its resident A shard along the tree axis with the XOR-mask
+    involution that advances every pod's slab to ``p ^ (t + 1)``.
+    """
+    local_fn = local_fn or local_matmul
+
+    def body(ab, bb):
+        # hoisted: the stationary B column panel needs its full k extent
+        # exactly once (the s slabs are slices of it, not re-gathers)
+        bfull = _collectives.all_gather(bb, axis_x, axis=0, tiled=True)
+        ks = bfull.shape[0] // s                  # k rows per slab
+        p = lax.axis_index(tree_axis)
+        acc = jnp.zeros((ab.shape[0], bb.shape[1]), jnp.float32)
+        cur = ab
+        for t in range(s):
+            # pod-local broadcast step: widen the resident slab shard to
+            # the full slab over the column axis
+            arow = _collectives.all_gather(cur, axis_y, axis=1, tiled=True)
+            j = p ^ t                              # resident slab index
+            bslab = lax.dynamic_slice(
+                bfull, (j * ks, 0), (ks, bfull.shape[1]))
+            acc = acc + local_fn(arow, bslab, out_dtype=jnp.float32)
+            if t < s - 1:
+                cur = _collectives.ppermute(
+                    cur, tree_axis, tree_exchange_perm(s, t))
+        return acc.astype(out_dtype)
+
+    return body
+
+
+def fattree_matmul(a: jax.Array, b: jax.Array, *, mesh,
+                   tree_axis: str = "tree",
+                   axis_x: str = "x", axis_y: str = "y",
+                   out_dtype=None) -> jax.Array:
+    """Global (M, K) x (K, N) matmul on a pod-of-pods mesh: the recursive
+    fat-tree schedule over ``tree_axis`` with a broadcast (qx, qy) torus
+    program inside each pod."""
+    from repro.plan import build_plan, execute_plan
+
+    plan = build_plan(
+        a.shape[-2], b.shape[-1], a.shape[-1], mesh=mesh, strategy="fattree",
+        axes=(tree_axis, axis_x, axis_y), batch=tuple(a.shape[:-2]),
+        a_dtype=a.dtype, b_dtype=b.dtype, out_dtype=out_dtype,
+    )
+    return execute_plan(plan, a, b)

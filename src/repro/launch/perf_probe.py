@@ -71,7 +71,8 @@ def calibrate_main(args) -> None:
 
         mesh = jax.make_mesh(shape, names,
                              devices=devs[:math.prod(shape)])
-    profile = probe_links(mesh, reps=args.reps)
+    tree_axes = tuple(a for a in args.tree_axes.split(",") if a)
+    profile = probe_links(mesh, reps=args.reps, tree_axes=tree_axes)
     save_profile(profile, args.profile_out)
     print(json.dumps(profile.to_json(), indent=1, sort_keys=True))
     print(f"# wrote {args.profile_out}")
@@ -140,6 +141,9 @@ def main() -> None:
     ap.add_argument("--mesh-shape", default="",
                     help="e.g. 2x2 or 8 -- mesh to probe axes on")
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--tree-axes", default="",
+                    help="comma-separated inter-pod (DCN-class) mesh axes; "
+                         "pooled into a 'dcn' link class instead of 'ici'")
     # legacy cell-probe mode (selected by --arch)
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

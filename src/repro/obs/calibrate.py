@@ -87,34 +87,66 @@ def _probe_peak_flops(reps: int, n: int = 256) -> float:
     return 2.0 * n ** 3 / max(t, 1e-9)
 
 
+def _assemble_links(axis_samples, tree_axes: Sequence[str] = ()):
+    """Compose the profile's link-class table from per-axis probe samples.
+
+    ``axis_samples`` is ``[(axis, sizes_bytes, times_s), ...]``.  Every
+    measured axis keeps its own ``axis:{name}`` class; the pooled classes
+    follow the machine hierarchy: non-tree axes pool into ``"ici"`` (the
+    planner's default link class) and ``tree_axes`` into ``"dcn"`` (the
+    inter-pod class a hierarchical plan's tree axis belongs to -- DCN
+    latency/bandwidth must not be averaged into the ICI fit, or a slow
+    inter-pod link would silently *improve* the pooled model).  When every
+    measured axis is a tree axis, ``"ici"`` falls back to the dcn fit so
+    the profile stays usable by non-hierarchical estimates."""
+    tree_axes = frozenset(tree_axes)
+    links = []
+    ici: Tuple[list, list] = ([], [])
+    dcn: Tuple[list, list] = ([], [])
+    for axis, sizes, times in axis_samples:
+        links.append((f"axis:{axis}", fit_alpha_beta(sizes, times)))
+        sink = dcn if axis in tree_axes else ici
+        sink[0].extend(sizes)
+        sink[1].extend(times)
+    pooled = []
+    if ici[0]:
+        pooled.append(("ici", fit_alpha_beta(*ici)))
+    elif dcn[0]:
+        pooled.append(("ici", fit_alpha_beta(*dcn)))
+    if dcn[0]:
+        pooled.append(("dcn", fit_alpha_beta(*dcn)))
+    return pooled + links
+
+
 def probe_links(mesh=None, *,
                 sizes_bytes: Sequence[int] = DEFAULT_SIZES_BYTES,
-                reps: int = 3) -> MachineProfile:
+                reps: int = 3,
+                tree_axes: Sequence[str] = ()) -> MachineProfile:
     """Microbenchmark every link class of ``mesh`` and return the fitted
     :class:`MachineProfile` (see module docstring).  This is the
     calibration pass the ROADMAP's calibrated-cost-model item asks for;
     persist the result with ``repro.obs.save_profile`` and hand it to
     ``build_plan(profile=...)``.
+
+    ``tree_axes`` names the mesh axes that are inter-pod (DCN-class)
+    links: they are excluded from the pooled ``"ici"`` fit and pooled into
+    a separate ``"dcn"`` class instead (see ``_assemble_links``), so a
+    calibrated ranking can prefer the hierarchical fat-tree plan exactly
+    when the inter-pod link is slow.
     """
     import jax
 
     with span("obs.calibrate", mesh=str(getattr(mesh, "shape", None))):
         links = []
-        pooled_sizes: list = []
-        pooled_times: list = []
         if mesh is not None and mesh.size > 1:
+            samples = []
             for axis in mesh.axis_names:
                 if int(mesh.shape[axis]) < 2:
                     continue
                 times = [_probe_axis(mesh, axis, s, reps)
                          for s in sizes_bytes]
-                links.append((f"axis:{axis}",
-                              fit_alpha_beta(sizes_bytes, times)))
-                pooled_sizes.extend(sizes_bytes)
-                pooled_times.extend(times)
-            if pooled_sizes:
-                links.insert(0, ("ici",
-                                 fit_alpha_beta(pooled_sizes, pooled_times)))
+                samples.append((axis, list(sizes_bytes), times))
+            links = _assemble_links(samples, tree_axes)
         if not links:
             times = [_probe_local(s, reps) for s in sizes_bytes]
             fit = fit_alpha_beta(sizes_bytes, times)

@@ -11,9 +11,9 @@ Plans are immutable and hashable; ``repro.plan.cache`` memoizes them on
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 import time
+import weakref
 from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp
@@ -103,13 +103,23 @@ def mesh_fingerprint(mesh) -> Optional[Tuple]:
         return None
     try:
         return _mesh_fingerprint_cached(mesh)
-    except TypeError:  # unhashable mesh stand-in (tests): compute directly
+    except TypeError:  # unhashable/unweakrefable mesh stand-in: compute directly
         return _mesh_fingerprint_uncached(mesh)
 
 
-@functools.lru_cache(maxsize=64)
+# Keyed on weakrefs so the memo never pins a mesh (and its device handles /
+# buffers) past its natural lifetime -- elastic re-meshing
+# (``runtime/elastic.py``) churns through meshes, and an lru_cache here would
+# keep the last 64 of them alive for the whole process.
+_mesh_fingerprint_memo: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
 def _mesh_fingerprint_cached(mesh) -> Tuple:
-    return _mesh_fingerprint_uncached(mesh)
+    fp = _mesh_fingerprint_memo.get(mesh)  # TypeError if unweakrefable
+    if fp is None:
+        fp = _mesh_fingerprint_uncached(mesh)
+        _mesh_fingerprint_memo[mesh] = fp
+    return fp
 
 
 def _mesh_fingerprint_uncached(mesh) -> Tuple:
@@ -138,6 +148,10 @@ class SchedulePlan:
       pad_a/pad_b  -- block-multiple padding taking the problem onto the grid
       cost         -- the analytic Estimate that ranked this strategy
       overlap      -- execute the double-buffered lowering [max(comp, comm)]
+      axis_roles   -- hierarchical (axis, role) pairs [the wreath levels]:
+                      ``tree`` is an inter-pod (DCN-class) axis, ``pod`` a
+                      replication axis, ``row``/``col`` the intra-pod torus
+                      pair, ``ring`` a flattened-ring member
     """
 
     strategy: str
@@ -150,6 +164,7 @@ class SchedulePlan:
     mesh_fp: Optional[Tuple] = None
     axes: Tuple[str, ...] = ()
     grid: Tuple[int, ...] = ()
+    axis_roles: Tuple[Tuple[str, str], ...] = ()
     replication: int = 1
     pad_a: Tuple[int, int] = (1, 1)
     pad_b: Tuple[int, int] = (1, 1)
@@ -169,12 +184,36 @@ def _square_axes(mesh, names) -> bool:
     return mesh.shape[names[0]] == mesh.shape[names[1]]
 
 
+# per-strategy role sequence over the resolved axes, leading axis first
+_AXIS_ROLE_SEQ = {
+    "cannon": ("row", "col"),
+    "torus": ("row", "col"),
+    "summa": ("row", "col"),
+    "cannon25d": ("pod", "row", "col"),
+    "pod25d": ("pod", "row", "col"),
+    "fattree": ("tree", "row", "col"),
+}
+
+
+def _axis_roles(strategy: str,
+                ax: Tuple[str, ...]) -> Tuple[Tuple[str, str], ...]:
+    """Hierarchical (axis, role) pairs for ``strategy`` over resolved axes
+    ``ax`` -- the machine hierarchy the lowering will drive collectives
+    over.  Ring strategies flatten every axis into one logical ring; custom
+    torus schedules reuse the cannon roles."""
+    if strategy in ("ring_ag", "ring_rs"):
+        return tuple((a, "ring") for a in ax)
+    seq = _AXIS_ROLE_SEQ.get(strategy, ("row", "col"))
+    return tuple(zip(ax, seq))
+
+
 def mesh_candidates(mesh) -> Tuple[str, ...]:
     """Strategies executable on ``mesh`` -- the topology *filter* (ranking is
     the cost model's job, see ``choose``).  Ring strategies run on any mesh
     (all axes flattened into one logical ring); 2-D torus strategies need two
     axes (Cannon a square pair); the 2.5D family needs a pod axis plus an
-    in-layer pair."""
+    in-layer pair; the fat-tree needs a power-of-two inter-pod tree axis
+    over an intra-pod pair."""
     if mesh.size <= 1:
         return ("local",)
     names = tuple(mesh.axis_names)
@@ -187,6 +226,9 @@ def mesh_candidates(mesh) -> Tuple[str, ...]:
         if mesh.shape[names[1]] == mesh.shape[names[2]]:
             cands.append("cannon25d")
         cands.append("pod25d")
+        s = mesh.shape[names[0]]
+        if s >= 2 and (s & (s - 1)) == 0:
+            cands.append("fattree")
     return tuple(cands)
 
 
@@ -196,7 +238,7 @@ def _grid_for(mesh, strategy: str,
     on over the resolved axes ``ax``, so the estimate prices the real
     program (a 2x8 mesh's SUMMA is a 2x8 SUMMA, not the canonical 4x4 of
     tp=16)."""
-    if strategy in ("cannon", "summa", "cannon25d", "pod25d"):
+    if strategy in ("cannon", "summa", "cannon25d", "pod25d", "fattree"):
         return tuple(mesh.shape[a] for a in ax)
     return None  # ring family / local: only mesh.size matters
 
@@ -232,11 +274,12 @@ def rank_mesh_strategies(m: int, n: int, k: int, mesh,
 # strategies with a shard_map lowering rule (xla_ag/xla_rs exist only in
 # the cost model; forcing them is rejected at plan time)
 _EXECUTABLE = frozenset(
-    ("cannon", "summa", "cannon25d", "pod25d", "ring_ag", "ring_rs", "local"))
+    ("cannon", "summa", "cannon25d", "pod25d", "fattree", "ring_ag",
+     "ring_rs", "local"))
 
 # minimum mesh-axis count per strategy, for early clear errors
 _MIN_AXES = {"cannon": 2, "summa": 2, "cannon25d": 3, "pod25d": 1,
-             "ring_ag": 1, "ring_rs": 1}
+             "fattree": 3, "ring_ag": 1, "ring_rs": 1}
 
 
 def _plan_axes(mesh, strategy: str, axes: Optional[Tuple[str, ...]]):
@@ -251,7 +294,7 @@ def _plan_axes(mesh, strategy: str, axes: Optional[Tuple[str, ...]]):
         return names
     if strategy in ("cannon", "summa"):
         return names[:2]
-    if strategy == "cannon25d":
+    if strategy in ("cannon25d", "fattree"):
         return names[:3]
     if strategy == "pod25d":
         rest = names[1:]
@@ -422,8 +465,23 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
         return SchedulePlan(
             strategy="summa", m=m, n=n, k=k, batch=tuple(batch),
             out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
-            axes=ax, grid=(qx, qy),
+            axes=ax, grid=(qx, qy), axis_roles=_axis_roles("summa", ax),
             pad_a=(qx, qx * qy), pad_b=(qx * qy, qy),
+            tiling=tiling, cost=cost, overlap=resolved,
+        )
+    if strategy == "fattree":
+        s = mesh.shape[ax[0]]
+        if s < 2 or s & (s - 1):
+            raise ValueError(
+                f"fat-tree needs a power-of-two tree axis with >= 2 pods; "
+                f"axis {ax[0]!r} has size {s}")
+        qx, qy = mesh.shape[ax[1]], mesh.shape[ax[2]]
+        return SchedulePlan(
+            strategy="fattree", m=m, n=n, k=k, batch=tuple(batch),
+            out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
+            axes=ax, grid=(s, qx, qy),
+            axis_roles=_axis_roles("fattree", ax),
+            pad_a=(qx, s * qx * qy), pad_b=(s * qx * qy, s * qy),
             tiling=tiling, cost=cost, overlap=resolved,
         )
     if strategy == "cannon25d":
@@ -436,6 +494,7 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
             strategy="cannon25d", m=m, n=n, k=k, batch=tuple(batch),
             out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
             axes=ax, grid=(c, q, q), replication=c,
+            axis_roles=_axis_roles("cannon25d", ax),
             pad_a=(q, c * q), pad_b=(c * q, q),
             schedule=sched, torus=TorusProgram.from_schedule(sched),
             tiling=tiling, cost=cost, overlap=resolved,
@@ -449,6 +508,7 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
                 out_dtype=out_dtype, mesh=mesh,
                 mesh_fp=mesh_fingerprint(mesh),
                 axes=ax, grid=(c, qx, qy), replication=c,
+                axis_roles=_axis_roles("pod25d", ax),
                 pad_a=(qx, c * qx * qy), pad_b=(c * qx * qy, qy),
                 tiling=tiling, cost=cost, overlap=resolved,
             )
@@ -456,6 +516,7 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
             strategy="pod25d", m=m, n=n, k=k, batch=tuple(batch),
             out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
             axes=ax[:1], grid=(c,), replication=c,
+            axis_roles=_axis_roles("pod25d", ax[:1]),
             pad_a=(1, c), pad_b=(c, 1),
             tiling=tiling, cost=cost, overlap=resolved,
         )
@@ -468,7 +529,8 @@ def _build_plan_uncached(m, n, k, *, mesh, strategy, batch, a_dtype,
         return SchedulePlan(
             strategy=strategy, m=m, n=n, k=k, batch=tuple(batch),
             out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
-            axes=ax, grid=(t,), pad_a=pad_a, pad_b=pad_b,
+            axes=ax, grid=(t,), axis_roles=_axis_roles(strategy, ax),
+            pad_a=pad_a, pad_b=pad_b,
             tiling=tiling, cost=cost, overlap=resolved,
         )
     raise ValueError(f"cannot plan strategy {strategy!r}")
@@ -486,7 +548,9 @@ def _torus_plan(m, n, k, batch, out_dtype, mesh, ax, schedule, tiling, cost,
     return SchedulePlan(
         strategy=strategy, m=m, n=n, k=k, batch=tuple(batch),
         out_dtype=out_dtype, mesh=mesh, mesh_fp=mesh_fingerprint(mesh),
-        axes=tuple(ax[:2]), grid=(q, q), pad_a=(q, q), pad_b=(q, q),
+        axes=tuple(ax[:2]), grid=(q, q),
+        axis_roles=_axis_roles("torus", tuple(ax[:2])),
+        pad_a=(q, q), pad_b=(q, q),
         schedule=schedule, torus=TorusProgram.from_schedule(schedule),
         tiling=tiling, cost=cost, overlap=overlap,
     )

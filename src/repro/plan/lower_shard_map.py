@@ -25,6 +25,7 @@ from repro import obs
 from repro.dist._util import pad_to
 from repro.dist.cannon import (torus_program_body,
                                torus_program_body_overlapped)
+from repro.dist.fattree import fattree_body
 from repro.dist.pod25d import (cannon25d_body, pod25d_slab_body,
                                pod25d_summa_body,
                                pod25d_summa_overlapped_body)
@@ -116,6 +117,17 @@ def _lower_shard_map(plan: SchedulePlan):
             mesh=mesh,
             in_specs=(P(ax, ay), P(ax, ay)),
             out_specs=P(ax, ay),
+        )
+        return _padded(f, plan)
+
+    if plan.strategy == "fattree":
+        tr, ax, ay = plan.axes
+        f = shard_map(
+            fattree_body(tr, ax, ay, plan.grid[0], out_dtype,
+                         local_fn=local_fn),
+            mesh=mesh,
+            in_specs=(P(ax, (tr, ay)), P(ax, (tr, ay))),
+            out_specs=P(ax, (tr, ay)),
         )
         return _padded(f, plan)
 

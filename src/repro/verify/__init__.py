@@ -31,8 +31,8 @@ from .conformance import (ConformanceError, ConformanceReport, check,
 from .drift import check_drift, ranking_drift
 from .interceptor import Capture, intercept, measure_plan
 from .trace import (CollectiveRecord, MachineTrace, Trace, canonical_perm,
-                    fattree_level_words, padded_dims, trace_fattree,
-                    trace_hex, trace_plan)
+                    fattree_a_level_words, fattree_level_words, padded_dims,
+                    trace_fattree, trace_hex, trace_plan, tree_level_words)
 
 __all__ = [
     "conformance", "drift", "interceptor", "trace",
@@ -41,6 +41,6 @@ __all__ = [
     "hlo_collective_bytes", "matrix_cells", "predicted_words_per_device",
     "run_matrix", "Capture", "intercept", "measure_plan",
     "CollectiveRecord", "MachineTrace", "Trace", "canonical_perm",
-    "fattree_level_words", "padded_dims", "trace_fattree", "trace_hex",
-    "trace_plan",
+    "fattree_a_level_words", "fattree_level_words", "padded_dims",
+    "trace_fattree", "trace_hex", "trace_plan", "tree_level_words",
 ]

@@ -80,6 +80,22 @@ def _ring_translation(perm, t: int) -> Optional[int]:
     return mu if mu is not None else 0
 
 
+def _xor_mask(perm, g: int) -> Optional[int]:
+    """Nonzero XOR mask realized by a perm on Z_2^log2(g), or None.  The
+    fat-tree exchange is the involution d -> d ^ mask: every pod moves
+    (no fixed points, so the canonical perm has all g pairs) and the mask
+    is a single constant (its highest bit names the deepest tree level
+    crossed)."""
+    perm = tuple(perm)
+    masks = {int(s) ^ int(d) for s, d in perm}
+    if len(masks) != 1:
+        return None
+    mask = masks.pop()
+    if mask == 0 or len(perm) != g:
+        return None
+    return mask
+
+
 def predicted_words_per_device(plan) -> float:
     """The analytic cost model's per-device movement words for ``plan`` on
     the padded problem.  Torus-family plans are priced from the schedule
@@ -135,6 +151,12 @@ def memory_bound_words(plan) -> float:
     share_b = kp * np_ / max(p, 1)
     share_c = mp * np_ / max(p, 1)
     overlap = bool(getattr(plan, "overlap", False))
+    if plan.strategy == "fattree":
+        # resident + column-gathered A slab, B shard + row-gathered panel,
+        # one fp32 output block (the sliced k-slab reads the gathered
+        # panel; it is not an extra resident copy in either derivation)
+        s, qx, qy = plan.grid
+        return float((1 + qy) * share_a + (1 + qx) * share_b + share_c)
     if plan.strategy in ("summa", "pod25d"):
         if len(plan.grid) >= 3:
             c, qx, qy = plan.grid
@@ -210,6 +232,12 @@ def _check_structure(plan, trace: Trace) -> None:
                           "commute with the torus action")
                 if rec.var:
                     executed_mus[rec.var] = mu
+            elif plan.strategy == "fattree":
+                if _xor_mask(rec.perm, rec.group) is None:
+                    _fail("structure",
+                          f"tree perm for {rec.var} is not an XOR-mask "
+                          "involution on the pod axis (the Gray-order slab "
+                          "walk is broken)")
             elif plan.strategy in ("ring_ag", "ring_rs"):
                 if _ring_translation(rec.perm, rec.group) is None:
                     _fail("structure",
@@ -268,6 +296,50 @@ def _check_cost(plan, trace: Trace) -> Tuple[float, Optional[float], float]:
     return words_node, link_words, itt
 
 
+def _check_fattree_levels(plan, trace: Trace) -> None:
+    """Per-tree-level conformance of a fat-tree plan -- three independent
+    derivations of the words entering every tree level must agree exactly:
+
+      1. the plan trace's movement ppermutes, bucketed by the level their
+         XOR masks cross (``trace.tree_level_words``);
+      2. the analytic closed form ``Estimate.tree_level_words`` on the
+         padded problem;
+      3. the wreath-product machine model itself:
+         ``trace_fattree(FatTreeSchedule(log2 s))`` A events projected to
+         pod (k-bit) coordinates, scaled from elements to slab words.
+
+    The top level is additionally pinned to the paper's claim: only A
+    crosses the root, moving exactly Mp x Kp words over the run."""
+    from repro.core.fattree import FatTreeSchedule
+    from repro.dist.api import estimate
+
+    from .trace import fattree_a_level_words, trace_fattree, tree_level_words
+
+    s = plan.grid[0]
+    dt = max(s.bit_length() - 1, 1)
+    mp, np_, kp = trace.padded
+    traced = tree_level_words(trace)
+    est = estimate("fattree", mp, np_, kp, trace.mesh_size, dtype_bytes=1,
+                   grid=plan.grid, axes=plan.axes)
+    machine = fattree_a_level_words(trace_fattree(FatTreeSchedule(dt)), dt)
+    scale = mp * kp / float(s * s)
+    for lvl in range(1, dt + 1):
+        analytic = est.tree_level_words[lvl - 1]
+        projected = machine[lvl] * scale
+        if not (math.isclose(traced[lvl], analytic,
+                             rel_tol=1e-9, abs_tol=1e-6)
+                and math.isclose(traced[lvl], projected,
+                                 rel_tol=1e-9, abs_tol=1e-6)):
+            _fail("cost",
+                  f"tree level {lvl} words diverge: trace={traced[lvl]} "
+                  f"analytic={analytic} wreath-projection={projected}")
+    if not math.isclose(traced[dt], float(mp * kp),
+                        rel_tol=1e-9, abs_tol=1e-6):
+        _fail("cost",
+              f"root-level words {traced[dt]} != Mp*Kp {mp * kp}: the "
+              "paper's only-A-crosses-the-top claim is violated")
+
+
 def hlo_collective_bytes(plan, dtype=None) -> float:
     """Third measurement modality: compile the plan under jit and sum the
     collective bytes ``repro.roofline.hlo_stats`` sees in the optimized
@@ -294,6 +366,8 @@ def check(plan, *, measure: bool = False, hlo: bool = False) -> ConformanceRepor
     trace = trace_plan(plan)
     _check_structure(plan, trace)
     words_node, link_words, itt = _check_cost(plan, trace)
+    if plan.strategy == "fattree":
+        _check_fattree_levels(plan, trace)
 
     if measure:
         from .interceptor import measure_plan
@@ -336,6 +410,8 @@ _CATALOG: Tuple[Tuple[str, Tuple[int, ...], Tuple[str, ...]], ...] = (
     ("cannon25d", (1, 2, 2), ("pod", "x", "y")),
     ("cannon25d", (2, 2, 2), ("pod", "x", "y")),
     ("cannon25d", (4, 2, 2), ("pod", "x", "y")),
+    ("fattree", (2, 2, 2), ("tree", "x", "y")),
+    ("fattree", (4, 2, 2), ("tree", "x", "y")),
     ("ring_ag", (4,), ("t",)),
     ("ring_ag", (2, 2), ("x", "y")),
     ("ring_ag", (8,), ("t",)),

@@ -32,6 +32,7 @@ DRIFT_CELLS: Tuple[Tuple[str, Tuple[int, ...], Tuple[str, ...]], ...] = (
     ("ring_rs", (4,), ("t",)),
     ("cannon25d", (2, 2, 2), ("pod", "x", "y")),
     ("pod25d", (2, 2, 2), ("pod", "x", "y")),
+    ("fattree", (2, 2, 2), ("tree", "x", "y")),
 )
 
 # (m, n, k) sample spanning the compute-bound / gather-cheap / reduce-cheap

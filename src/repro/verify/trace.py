@@ -32,6 +32,7 @@ import math
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.cost import perm_link_words
+from repro.core.fattree import tree_exchange_perm
 
 Perm = Tuple[Tuple[int, int], ...]
 
@@ -226,6 +227,29 @@ def trace_plan(plan) -> Trace:
             # gathered row panel + column panel + output block
             peak = float((mp // qx) * kp + kp * (np_ // qy)
                          + (mp // qx) * (np_ // qy))
+    elif strategy == "fattree":
+        s, qx, qy = grid
+        a_shard = (mp // qx) * (kp // (s * qy))
+        b_shard = (kp // qx) * (np_ // (s * qy))
+        c_shard = (mp // qx) * (np_ // (s * qy))
+        # mirror of ``repro.dist.fattree.fattree_body``: one hoisted B
+        # panel gather over the rows, then s super-steps, each an A slab
+        # gather over the columns followed (except last) by the tree-axis
+        # XOR exchange advancing every pod's resident slab
+        recs = [CollectiveRecord("all_gather", qx, b_shard, None,
+                                 "gather", "B")]
+        for t in range(s):
+            recs.append(CollectiveRecord("all_gather", qy, a_shard, None,
+                                         "gather", "A"))
+            if t < s - 1:
+                recs.append(CollectiveRecord(
+                    "ppermute", s, a_shard,
+                    canonical_perm(tree_exchange_perm(s, t)),
+                    "movement", "A"))
+        # resident slab shard + gathered slab + B shard + gathered B
+        # panel + fp32 output block (the sliced B k-slab is a view of the
+        # gathered panel, not counted; see conformance.memory_bound_words)
+        peak = float((1 + qy) * a_shard + (1 + qx) * b_shard + c_shard)
     elif strategy == "cannon25d":
         c, q, _ = grid
         a_blk = (mp // q) * (kp // (c * q))
@@ -330,6 +354,63 @@ def fattree_level_words(trace: MachineTrace, d: int) -> Dict[int, int]:
         for lvl in range(1, top + 1):
             traffic[lvl] += 2 * words
     return traffic
+
+
+def fattree_a_level_words(trace: MachineTrace, d: int) -> Dict[int, int]:
+    """A-movement words per *tree-of-pods* level, from the machine trace.
+
+    The hierarchical lowering's tree axis is the k-dimension of the wreath
+    recursion: pod p owns contraction slab p, so processor bit (2l + 1)
+    (= k_l) of ``FatTreeSchedule`` is pod bit l of an s = 2^d tree axis.
+    Projecting every A event to its k-bits and counting one-directional
+    words whose endpoints first differ at pod bit (L - 1) yields the words
+    entering tree level L -- B events project to a constant (B_jk never
+    leaves its k) and drop out, reproducing "only A crosses the tree".
+    Scaled by the slab words, this equals the plan trace's
+    ``tree_level_words`` and the analytic ``Estimate.tree_level_words``.
+    """
+
+    def kbits(proc: int) -> int:
+        k = 0
+        for l in range(d):
+            k |= ((proc >> (2 * l + 1)) & 1) << l
+        return k
+
+    words = {lvl: 0 for lvl in range(1, d + 1)}
+    for var, src, dst, w in trace.events:
+        if var != "A":
+            continue
+        ks, kd = kbits(src), kbits(dst)
+        if ks == kd:
+            continue
+        top = (ks ^ kd).bit_length()
+        for lvl in range(1, top + 1):
+            words[lvl] += w
+    return words
+
+
+def tree_level_words(trace: Trace) -> Dict[int, float]:
+    """Mesh-wide words entering each tree level of a fat-tree plan trace.
+
+    Level L (1 = between sibling pods, log2(s) = across the root) is
+    entered by a movement-ppermute pair whose endpoints first differ at
+    pod bit (L - 1); the pair contributes its shard words to every level
+    <= L (one-directional: the involution's two pairs are both counted,
+    each once).  Comparable exactly to ``Estimate.tree_level_words`` on
+    the padded dims and, scaled, to ``fattree_a_level_words``.
+    """
+    s = trace.grid[0]
+    dt = max(s.bit_length() - 1, 1)
+    copies = trace.mesh_size / s
+    words = {lvl: 0.0 for lvl in range(1, dt + 1)}
+    for r in trace.records:
+        if r.kind != "ppermute" or r.phase != "movement" or r.group != s:
+            continue
+        for src, dst in (r.perm or ()):
+            top = (src ^ dst).bit_length()
+            for lvl in range(1, min(top, dt) + 1):
+                words[lvl] += r.shard_words * copies
+    return words
 
 
 def hex_element_positions(sched, var: str, r: int, s: int):

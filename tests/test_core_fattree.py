@@ -6,7 +6,8 @@ sizes level by level.
 """
 import pytest
 
-from repro.core.fattree import FatTreeSchedule
+from repro.core.fattree import (FatTreeSchedule, tree_exchange_mask,
+                                tree_exchange_perm)
 
 
 @pytest.mark.parametrize("d", [1, 2, 3])
@@ -82,3 +83,54 @@ class TestHopCounts:
                 pb = [ft.pos_B(a, b, t) for t in range(2)]
                 assert pa[0] ^ pa[1] == 0b10  # top-level crossing
                 assert pb[0] ^ pb[1] == 0b01  # leaf-level crossing
+
+    def test_base_case_word_pins(self):
+        """Direct pin of the paper's Fig.-11 constants in word (not
+        words x links) units: 8 words cross the leaf links, 4 = n^2 the
+        top link -- the dead-conditional regression guard."""
+        ft = FatTreeSchedule(d=1)
+        assert ft.level_words(1) == 8
+        assert ft.level_words(2) == 4
+
+    def test_traffic_sweep_is_cached(self):
+        """``link_traffic``/``level_words``/``top_level_words`` share one
+        cached sweep, and the public dict is a defensive copy."""
+        ft = FatTreeSchedule(d=2)
+        assert ft._link_traffic is ft._link_traffic
+        public = ft.link_traffic()
+        assert public == ft._link_traffic and public is not ft._link_traffic
+        public[1] = -1
+        assert ft.link_traffic()[1] != -1
+
+    @pytest.mark.parametrize("d", [1, 2, 3])
+    def test_link_traffic_matches_trace_oracle(self, d):
+        """Cross-check against the independent oracle: the verify tracer
+        replays positions into events and buckets them by level with its
+        own accounting -- both derivations must agree exactly."""
+        from repro.verify import fattree_level_words, trace_fattree
+
+        ft = FatTreeSchedule(d=d)
+        assert ft.link_traffic() == fattree_level_words(trace_fattree(ft), d)
+
+
+class TestExchangeMasks:
+    """The Gray-walk exchange helpers driving the hierarchical lowering."""
+
+    @pytest.mark.parametrize("s", [2, 4, 8, 16])
+    def test_masks_are_gray_and_root_crossed_once(self, s):
+        masks = [tree_exchange_mask(t) for t in range(s - 1)]
+        # each mask is 2^(b+1) - 1: the Gray-code increment form
+        assert all(m & (m + 1) == 0 and m > 0 for m in masks)
+        # the root (top bit of the pod index) is crossed exactly once
+        assert sum(1 for m in masks if m >> (s.bit_length() - 2)) == 1
+        assert masks[s // 2 - 1] == s - 1
+
+    @pytest.mark.parametrize("s", [2, 4, 8])
+    def test_perms_are_involutions_covering_all_slabs(self, s):
+        for t in range(s - 1):
+            perm = dict(tree_exchange_perm(s, t))
+            assert sorted(perm) == list(range(s))
+            assert all(perm[perm[d]] == d and perm[d] != d for d in perm)
+        # the walk j = p ^ t visits every slab on every pod
+        for p in range(s):
+            assert {p ^ t for t in range(s)} == set(range(s))

@@ -153,6 +153,32 @@ def test_mesh_fingerprint_distinguishes_meshes():
     assert mesh_fingerprint(m1) == mesh_fingerprint(fake_mesh((2, 2), ("x", "y")))
 
 
+def test_mesh_fingerprint_memo_releases_dead_meshes():
+    """Regression pin for the lru_cache leak: the fingerprint memo must not
+    keep a mesh (and its device handles) alive after the caller drops it --
+    elastic re-meshing churns through meshes for the process lifetime.
+    SimpleNamespace is unhashable (it takes the uncached path), so this
+    uses a plain-class stand-in that is hashable AND weakrefable, like a
+    real jax mesh."""
+    import gc
+    import weakref
+
+    class HashableMesh:
+        def __init__(self, proto):
+            self.axis_names = proto.axis_names
+            self.shape = proto.shape
+            self.size = proto.size
+            self.devices = proto.devices
+
+    mesh = HashableMesh(fake_mesh((2, 2), ("x", "y")))
+    fp = mesh_fingerprint(mesh)
+    assert mesh_fingerprint(mesh) is fp  # memoized per mesh object
+    ref = weakref.ref(mesh)
+    del mesh
+    gc.collect()
+    assert ref() is None, "fingerprint memo pinned a dead mesh"
+
+
 # ---------------------------------------------------------------------------
 # local execution paths (1 device, no mesh)
 # ---------------------------------------------------------------------------
