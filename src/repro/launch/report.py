@@ -80,10 +80,49 @@ def plan_cache_table(info=None):
     ])
 
 
+def serve_sweep_table(data):
+    """Render a ``repro.serve_sweep/v1`` JSON (benchmarks/serve_sweep.py)
+    as a markdown table.  Latency quantiles can be null (a 1-token run has
+    no timed decode steps) and print as '-'; failed cells print their last
+    error line."""
+
+    def v(x):
+        if x is None:
+            return "-"
+        return f"{x:.3f}" if isinstance(x, float) else str(x)
+
+    rows = [
+        "| mesh | bucket | strategy | routed | tok/s | tok/s/dev | "
+        "ttft ms | p50 ms | p99 ms | hit rate | match |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in data["cells"]:
+        if not c.get("ok"):
+            err = (c.get("error") or "?").strip().splitlines()[-1][:60]
+            rows.append(f"| {c['mesh']} | {c['bucket']} | {c['strategy']} | "
+                        f"ERR | - | - | - | - | - | - | {err} |")
+            continue
+        rows.append(
+            f"| {c['mesh']} | {c['bucket']} | {c['strategy']} | "
+            f"{'Y' if c['routed'] else 'n'} | {v(c['tokens_per_s'])} | "
+            f"{v(c['tokens_per_s_per_device'])} | {v(c['ttft_ms'])} | "
+            f"{v(c['p50_ms'])} | {v(c['p99_ms'])} | "
+            f"{v(c['cache_hit_rate'])} | "
+            f"{'Y' if c['match_baseline'] else 'MISMATCH'} |")
+    return "\n".join(rows)
+
+
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results_v2.json"
     with open(path) as f:
         data = json.load(f)
+    if data.get("schema") == "repro.serve_sweep/v1":
+        cfg = data["config"]
+        print(f"### Serve sweep: {data['arch']} "
+              f"(max_new={cfg['max_new_tokens']}, "
+              f"{cfg['devices']} devices)\n")
+        print(serve_sweep_table(data))
+        return
     cells = data["cells"]
     print("### Roofline (single-pod 16x16)\n")
     print(roofline_table(cells, "16x16"))

@@ -1,26 +1,64 @@
-"""Production serving launcher: batched decode over the KV/state cache.
+"""Production serving launcher: plan-routed batched decode via repro.serve.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-        --batch 8 --max-new 32
+        --mesh 2x2 --buckets 4x16 8x32 --max-new 16
+
+Builds a ``repro.serve.Server`` (persistent compiled prefill/decode pair),
+AOT-warms the declared (batch, seq) bucket grid -- filling the plan cache
+with each bucket's ``SchedulePlan``s -- then serves a synthetic request
+batch through the bucket router and prints throughput, TTFT, per-token
+latency quantiles, and the serve-window plan-cache report.  ``--mesh``
+routes every forward matmul through the plan engine (on CPU runs set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first, as the CI
+smoke job does); without it the server decodes the local GSPMD baseline.
+``--smoke`` selects the reduced config and exits nonzero on any serving
+error -- the CI entry point.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import sys
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.launch.report import plan_cache_table
 from repro.models.registry import build_model
-from repro.runtime.serve import ServeConfig, batch_requests, generate
+from repro.runtime.serve import ServeConfig
+from repro.serve import Server, as_bucket
 
 
-def main() -> None:
+def _parse_mesh(spec):
+    if not spec:
+        return None
+    rows, cols = (int(s) for s in spec.lower().split("x"))
+    devs = jax.devices()
+    if len(devs) < rows * cols:
+        raise SystemExit(
+            f"--mesh {spec} needs {rows * cols} devices, have {len(devs)}; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count=N for "
+            f"CPU runs")
+    return jax.make_mesh((rows, cols), ("x", "y"), devices=devs[: rows * cols])
+
+
+def _parse_bucket(spec) -> tuple:
+    batch, seq = (int(s) for s in spec.lower().split("x"))
+    return (batch, seq)
+
+
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--mesh", default=None, metavar="RxC",
+                    help="route matmuls through the plan engine on this mesh")
+    ap.add_argument("--strategy", default=None,
+                    help="pin the schedule strategy inside the plan scope")
+    ap.add_argument("--buckets", nargs="+", default=["4x16", "8x32"],
+                    metavar="BxS", help="warm (batch, seq) serving buckets")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="synthetic requests to serve")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -30,21 +68,51 @@ def main() -> None:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    prompts = [rng.integers(1, cfg.vocab_size, size=rng.integers(4, 12)).tolist()
-               for _ in range(args.batch)]
-    batch, lens = batch_requests(prompts)
+    mesh = _parse_mesh(args.mesh)
+    buckets = [as_bucket(_parse_bucket(b)) for b in args.buckets]
     sc = ServeConfig(max_new_tokens=args.max_new, max_seq=args.max_seq,
                      temperature=args.temperature)
-    t0 = time.perf_counter()
-    out = generate(model, params, batch, sc)
-    dt = time.perf_counter() - t0
-    total_new = args.max_new * args.batch
-    print(f"[serve] arch={cfg.name} batch={args.batch} "
-          f"{total_new} tokens in {dt:.2f}s ({total_new/dt:.1f} tok/s)")
-    for i, row in enumerate(out):
-        print(f"  req{i} (len {lens[i]}): ...{row[-args.max_new:].tolist()[:8]}...")
+
+    server = Server(model, params, sc, mesh=mesh, strategy=args.strategy,
+                    buckets=buckets)
+    warm = server.warmup()
+    for label, w in warm.items():
+        print(f"[warmup] bucket {label}: {w['plans']} plans, "
+              f"{w['warm_s']:.2f}s")
+
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=rng.integers(4, 12)).tolist()
+               for _ in range(args.batch)]
+    res = server.generate(prompts, key=jax.random.PRNGKey(args.seed))
+    q = res.latency_quantiles_ms()
+    routed = "plan-routed" if mesh is not None else "local"
+    print(f"[serve] arch={cfg.name} {routed} batch={args.batch} "
+          f"bucket={res.bucket or 'cold'} "
+          f"{res.generated_tokens} tokens in {res.wall_s:.2f}s "
+          f"({res.tokens_per_s:.1f} tok/s) ttft={res.ttft_s * 1e3:.1f}ms "
+          f"p50={q['p50_ms'] if q['p50_ms'] is None else round(q['p50_ms'], 2)}ms "
+          f"p99={q['p99_ms'] if q['p99_ms'] is None else round(q['p99_ms'], 2)}ms")
+    for i, toks in enumerate(res.new_tokens):
+        print(f"  req{i} (len {len(res.sequences[i]) - len(toks)}): "
+              f"{toks[:8]}...")
+
+    rep = server.cache_report()
+    print("\n### Plan cache\n")
+    print(plan_cache_table(rep["info"]))
+    sw = rep.get("serve_window")
+    if sw is not None:
+        rate = "-" if sw["hit_rate"] is None else f"{sw['hit_rate']:.2f}"
+        print(f"serve window: {sw['hits']} hits / {sw['misses']} misses "
+              f"(hit rate {rate})")
+        if mesh is not None and sw["hit_rate"] not in (None, 1.0):
+            print("[serve] ERROR: warm-bucket serving missed the plan cache")
+            return 1
+    if mesh is not None and res.plan_probe["probed"] == 0:
+        print("[serve] ERROR: no warm plans probed -- decode not plan-routed")
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -43,15 +43,19 @@ Cache = Dict[str, jax.Array]
 
 def _mask(qpos: jax.Array, kpos: jax.Array, window: int,
           causal: bool = True) -> jax.Array:
-    """(Lq, Skv) boolean mask: causal + optional sliding window.  Negative
-    key positions (unwritten rolling-cache slots) are always invalid."""
+    """(Lq, Skv) -- or, with batched positions, (B, Lq, Skv) -- boolean
+    mask: causal + optional sliding window.  Negative key positions
+    (unwritten rolling-cache slots and left-padding slots, whose logical
+    position is slot - offset < 0) are always invalid.  ``qpos``/``kpos``
+    may be (L,)/(S,) or per-row (B, L)/(B, S); the two layouts broadcast."""
     if causal:
-        m = kpos[None, :] <= qpos[:, None]
+        m = kpos[..., None, :] <= qpos[..., :, None]
     else:
-        m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
-    m = jnp.logical_and(m, (kpos >= 0)[None, :])
+        m = jnp.ones(jnp.broadcast_shapes(
+            qpos[..., :, None].shape, kpos[..., None, :].shape), bool)
+    m = jnp.logical_and(m, (kpos >= 0)[..., None, :])
     if window > 0:
-        m = jnp.logical_and(m, kpos[None, :] > qpos[:, None] - window)
+        m = jnp.logical_and(m, kpos[..., None, :] > qpos[..., :, None] - window)
     return m
 
 
@@ -69,8 +73,10 @@ def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, qpos, kpos,
     s = jnp.einsum(
         "blhgd,bshd->blhgs", q, k, preferred_element_type=jnp.float32
     ) * scale
-    m = _mask(qpos, kpos, window, causal)              # (L, S)
-    s = jnp.where(m[None, :, None, None, :], s, -1e30)
+    m = _mask(qpos, kpos, window, causal)              # (L, S) or (B, L, S)
+    if m.ndim == 2:
+        m = m[None]
+    s = jnp.where(m[:, :, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1).astype(probs_dtype)
     o = jnp.einsum(
         "blhgs,bshd->blhgd", p, v.astype(probs_dtype),
@@ -98,7 +104,10 @@ def chunked_attention(
     assert sq % chunk == 0, (sq, chunk)
     nc = sq // chunk
     qc = qg.reshape(b, nc, chunk, hkv, g, dk).transpose(1, 0, 2, 3, 4, 5)
-    pc = qpos.reshape(nc, chunk)
+    if qpos.ndim == 2:  # per-row positions (B, Sq): chunk alongside q
+        pc = qpos.reshape(b, nc, chunk).transpose(1, 0, 2)
+    else:
+        pc = qpos.reshape(nc, chunk)
 
     def body(_, qp):
         qi, pi = qp
@@ -131,9 +140,17 @@ def gqa_attention(
     cache: Optional[Cache] = None,
     pos: Optional[jax.Array] = None,
     causal: bool = True,
+    offsets: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Cache]]:
     """x: (B, S, d).  Training/prefill when cache is None (or being filled);
-    decode when cache is provided with scalar ``pos`` (S == 1)."""
+    decode when cache is provided with scalar ``pos`` (S == 1).
+
+    ``offsets`` (B,) shifts each row's logical positions for left-padded
+    serving batches: cache slot j holds row i's logical position
+    j - offsets[i], so padding slots land at negative positions and the
+    ``kpos >= 0`` mask removes them -- a row left-padded by ``offsets[i]``
+    attends to exactly the keys it would see decoded alone.  ``positions``
+    must then be the matching per-row logical query positions (B, S)."""
     b, s, d = x.shape
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = linear(x, p["wq"]).reshape(b, s, h, hd)
@@ -164,6 +181,8 @@ def gqa_attention(
             kpos = pos - jnp.mod(pos - idx, s_cache)
         else:
             kpos = idx
+        if offsets is not None:
+            kpos = kpos[None, :] - offsets[:, None]  # per-row logical slots
         o = chunked_attention(
             q, ck, cv, positions, kpos,
             window=cfg.window, chunk=cfg.attn_chunk, probs_dtype=pdt,
@@ -227,6 +246,7 @@ def mla_attention(
     positions: jax.Array,
     cache: Optional[Cache] = None,
     pos: Optional[jax.Array] = None,
+    offsets: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Cache]]:
     b, s, d = x.shape
     h = cfg.num_heads
@@ -272,8 +292,17 @@ def mla_attention(
         )
         sc *= scale
         kpos = jnp.arange(cc.shape[1])
-        valid = kpos[None, :] <= positions[:, None]          # (S, T)
-        sc = jnp.where(valid[None, :, None, :], sc, -1e30)
+        if offsets is not None:
+            # per-row logical slot positions; left-padding slots (< 0)
+            # are masked out, matching the GQA kpos >= 0 convention
+            kpos_b = kpos[None, :] - offsets[:, None]        # (B, T)
+            valid = jnp.logical_and(
+                kpos_b[:, None, :] <= positions[:, :, None],  # (B, S, T)
+                kpos_b[:, None, :] >= 0)
+            sc = jnp.where(valid[:, :, None, :], sc, -1e30)
+        else:
+            valid = kpos[None, :] <= positions[:, None]      # (S, T)
+            sc = jnp.where(valid[None, :, None, :], sc, -1e30)
         pr = jax.nn.softmax(sc, axis=-1)
         att_c = jnp.einsum("bsht,btl->bshl", pr, cc.astype(jnp.float32))
         o = jnp.einsum("bshl,lhv->bshv", att_c, w_uv.astype(jnp.float32))

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.local import local_matmul
-from repro.plan.context import planned_mesh
+from repro.plan.context import planned_mesh, planned_strategy
 
 
 def linear_params(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
@@ -31,5 +31,6 @@ def linear(x: jax.Array, w: jax.Array) -> jax.Array:
     if mesh is not None and getattr(mesh, "size", 1) > 1:
         from repro.dist.api import symmetric_matmul
 
-        return symmetric_matmul(x, w, mesh=mesh, out_dtype=x.dtype)
+        return symmetric_matmul(x, w, mesh=mesh, out_dtype=x.dtype,
+                                strategy=planned_strategy())
     return local_matmul(x, w, out_dtype=x.dtype)

@@ -40,6 +40,12 @@ def _stack_init(key, n: int, mk):
 
 
 class DecoderLM:
+    # serving can hand this model left-padded batches with per-row position
+    # offsets (see ``prefill``/``decode_step``); the recurrent families
+    # cannot (their state carries pad tokens forward), so the serving
+    # runtime checks this flag before passing offsets.
+    supports_position_offsets = True
+
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
         self.kind = "attn_moe" if cfg.num_experts else "attn_mlp"
@@ -119,27 +125,43 @@ class DecoderLM:
         return cache
 
     def prefill(
-        self, params: Params, cache: Cache, tokens: jax.Array
+        self, params: Params, cache: Cache, tokens: jax.Array,
+        offsets: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, Cache]:
         """One-pass prompt ingestion: runs the full (B, S_prompt) forward
         through the *cached* attention path (writes K/V at positions
         [0, S)), returning last-token logits + the filled cache.  The
         production serving path: prompt cost is one forward instead of
-        S_prompt decode steps."""
+        S_prompt decode steps.
+
+        ``offsets`` (B,) marks per-row left-padding: row i's logical token
+        positions become arange(S) - offsets[i], so its padding slots sit
+        at negative positions and attention masks them out -- a prompt
+        left-padded into a bucket decodes exactly as it would alone."""
+        positions = jnp.arange(tokens.shape[1])
+        if offsets is not None:
+            positions = positions[None, :] - offsets[:, None]
         return self._cached_forward(params, cache, tokens,
-                                    jnp.arange(tokens.shape[1]), jnp.int32(0))
+                                    positions, jnp.int32(0), offsets)
 
     def decode_step(
-        self, params: Params, cache: Cache, tokens: jax.Array, pos: jax.Array
+        self, params: Params, cache: Cache, tokens: jax.Array, pos: jax.Array,
+        offsets: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, Cache]:
-        """tokens: (B, 1); pos: scalar int32.  Returns (logits (B, V), cache)."""
-        return self._cached_forward(
-            params, cache, tokens, jnp.full((1,), pos, jnp.int32), pos
-        )
+        """tokens: (B, 1); pos: scalar int32 (the absolute cache slot).
+        Returns (logits (B, V), cache).  ``offsets`` as in ``prefill``:
+        row i's logical query position is pos - offsets[i]."""
+        if offsets is not None:
+            positions = pos - offsets[:, None]  # (B, 1) logical positions
+        else:
+            positions = jnp.full((1,), pos, jnp.int32)
+        return self._cached_forward(params, cache, tokens, positions, pos,
+                                    offsets)
 
     def _cached_forward(
         self, params: Params, cache: Cache, tokens: jax.Array,
         positions: jax.Array, pos: jax.Array,
+        offsets: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, Cache]:
         cfg = self.cfg
         x = embed(params["embed"], tokens)
@@ -148,7 +170,8 @@ class DecoderLM:
         if cfg.first_dense_layers:
             def dense_body(x, lp_lc):
                 lp, lc = lp_lc
-                x, _, nc = block_apply(lp, x, cfg, "attn_mlp", positions, lc, pos)
+                x, _, nc = block_apply(lp, x, cfg, "attn_mlp", positions, lc,
+                                       pos, offsets)
                 return x, nc
             x, new_cache["dense_layers"] = jax.lax.scan(
                 dense_body, x, (params["dense_layers"], cache["dense_layers"])
@@ -156,7 +179,8 @@ class DecoderLM:
 
         def body(x, lp_lc):
             lp, lc = lp_lc
-            x, _, nc = block_apply(lp, x, cfg, self.kind, positions, lc, pos)
+            x, _, nc = block_apply(lp, x, cfg, self.kind, positions, lc, pos,
+                                   offsets)
             return x, nc
 
         x, new_cache["layers"] = jax.lax.scan(

@@ -45,7 +45,7 @@ x @ w products through it.
 """
 from .cache import (PlanCache, cache_clear, cache_info, cache_stats,
                     plan_cache)
-from .context import planned_matmuls, planned_mesh
+from .context import planned_matmuls, planned_mesh, planned_strategy
 from .ir import (SchedulePlan, TilingPlan, TorusProgram, build_plan,
                  mesh_candidates, mesh_fingerprint, rank_mesh_strategies)
 from .lower_pallas import lower_pallas, lower_tiling
@@ -62,5 +62,6 @@ __all__ = [
     "execute_plan", "lower_shard_map", "on_lower", "lower_pallas",
     "lower_tiling",
     "PlanCache", "plan_cache", "cache_stats", "cache_info", "cache_clear",
-    "planned_matmuls", "planned_mesh", "Estimate", "estimate",
+    "planned_matmuls", "planned_mesh", "planned_strategy",
+    "Estimate", "estimate",
 ]

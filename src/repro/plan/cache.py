@@ -62,6 +62,15 @@ class PlanCache:
             self.misses = 0
             self.evictions = 0
 
+    def keys(self) -> tuple:
+        """Snapshot of the resident plan keys (insertion order).  The
+        serving warmup records the keys each (batch, seq) bucket inserted
+        so the bucket router can later re-``get`` them per request -- a
+        real cache probe that keeps hit-rate accounting honest and
+        detects evicted/invalidated warm plans."""
+        with self._lock:
+            return tuple(self._store)
+
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,

@@ -5,27 +5,42 @@ checks ``planned_mesh()``: inside a ``planned_matmuls(mesh)`` scope its
 x @ w products dispatch through ``repro.plan`` -- cost-model-ranked
 strategy, plan cache, batch folding -- instead of the purely local
 multiply.  Outside the scope nothing changes (the GSPMD baseline path).
+
+``planned_matmuls(mesh, strategy=...)`` additionally pins every in-scope
+product to one strategy instead of letting the cost model rank -- the
+sweep harness (`benchmarks/serve_sweep.py`) uses this to measure serving
+throughput per strategy cell.
 """
 from __future__ import annotations
 
 import contextlib
 from contextvars import ContextVar
-from typing import Optional
+from typing import Optional, Tuple
 
-_PLAN_MESH: ContextVar[Optional[object]] = ContextVar(
-    "repro_plan_mesh", default=None)
+_PLAN_SCOPE: ContextVar[Optional[Tuple[object, Optional[str]]]] = ContextVar(
+    "repro_plan_scope", default=None)
 
 
 def planned_mesh():
     """The mesh layer matmuls should plan against, or None (local path)."""
-    return _PLAN_MESH.get()
+    scope = _PLAN_SCOPE.get()
+    return None if scope is None else scope[0]
+
+
+def planned_strategy() -> Optional[str]:
+    """The strategy override pinned by the enclosing ``planned_matmuls``
+    scope, or None (the cost model ranks)."""
+    scope = _PLAN_SCOPE.get()
+    return None if scope is None else scope[1]
 
 
 @contextlib.contextmanager
-def planned_matmuls(mesh):
-    """Route layer matmuls through ``repro.plan`` on ``mesh`` within scope."""
-    token = _PLAN_MESH.set(mesh)
+def planned_matmuls(mesh, strategy: Optional[str] = None):
+    """Route layer matmuls through ``repro.plan`` on ``mesh`` within scope;
+    ``strategy`` optionally pins the schedule instead of cost-model
+    ranking (validated per shape by ``build_plan`` at dispatch time)."""
+    token = _PLAN_SCOPE.set((mesh, strategy))
     try:
         yield mesh
     finally:
-        _PLAN_MESH.reset(token)
+        _PLAN_SCOPE.reset(token)

@@ -5,15 +5,36 @@ a traced scalar, so one compile serves the whole generation).  Prompts are
 consumed through the same step (teacher forcing) -- robust across every
 model family here, including the recurrent ones whose prefill is the
 recurrence itself.
+
+Two serving-specific extensions over the seed version:
+
+  * ``mesh=`` routes every matmul in the forward through the plan engine
+    (``repro.plan.planned_matmuls``): decode executes solver-derived
+    ``SchedulePlan``s -- cost-model-ranked (or pinned via ``strategy=``),
+    memoized in the plan cache -- instead of the local GSPMD baseline.
+  * ``lens=`` marks per-request true prompt lengths in a left-padded
+    batch.  Models that support per-row position offsets
+    (``supports_position_offsets``) then mask the padding slots out of
+    attention and place real tokens at their logical positions, so a
+    request decoded inside a bucket emits the same greedy tokens as it
+    would alone (pinned by tests/test_serve.py).
+
+``repro.serve.Server`` builds the production path on top of this module:
+persistent compiled step functions, (batch, seq) bucket routing, AOT
+plan-cache warmup, and latency accounting.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Optional, Tuple
+import functools
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,35 +43,143 @@ class ServeConfig:
     temperature: float = 0.0     # 0 => greedy
     max_seq: int = 256
 
+    def __post_init__(self):
+        if self.max_new_tokens < 0:
+            raise ValueError(
+                f"max_new_tokens must be >= 0, got {self.max_new_tokens}")
+        if self.max_seq <= 0:
+            raise ValueError(f"max_seq must be > 0, got {self.max_seq}")
+        if self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be >= 0, got {self.temperature}")
+
+    def validate_prompt_len(self, sp: int) -> None:
+        """The KV/state cache holds ``max_seq`` slots; a prompt of length
+        ``sp`` plus ``max_new_tokens`` generated tokens must fit or decode
+        would silently wrap/overrun the cache."""
+        if sp + self.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt length {sp} + max_new_tokens {self.max_new_tokens} "
+                f"exceeds max_seq {self.max_seq}; raise max_seq or shorten "
+                f"the request")
+
 
 def generate(
     model, params, prompts: np.ndarray, cfg: ServeConfig,
     key: Optional[jax.Array] = None,
+    *,
+    mesh=None,
+    strategy: Optional[str] = None,
+    lens: Optional[np.ndarray] = None,
+    prefill_fn=None,
+    step_fn=None,
 ) -> np.ndarray:
-    """prompts: (B, S_prompt) int32 -> (B, S_prompt + max_new_tokens)."""
+    """prompts: (B, S_prompt) int32 -> (B, S_prompt + max_new_tokens).
+
+    ``mesh`` routes the forward through ``planned_matmuls`` (see module
+    docstring); ``strategy`` pins the schedule inside that scope.  ``lens``
+    gives per-request true lengths of a left-padded batch; models with
+    ``supports_position_offsets`` then decode each row at its own logical
+    positions.  ``prefill_fn``/``step_fn`` inject persistent compiled
+    functions (``repro.serve.Server``); by default fresh jit wrappers are
+    built per call.
+    """
     b, sp = prompts.shape
+    if b == 0:
+        return np.asarray(prompts)
+    cfg.validate_prompt_len(sp)
     cache = model.init_cache(b, cfg.max_seq)
-    step_fn = jax.jit(model.decode_step)
     key = key if key is not None else jax.random.PRNGKey(0)
+
+    offsets = None
+    if lens is not None and getattr(model, "supports_position_offsets", False):
+        offsets = jnp.asarray(sp - np.asarray(lens), jnp.int32)
 
     tokens = jnp.asarray(prompts, jnp.int32)
     out = [tokens]
-    if hasattr(model, "prefill"):
-        # one-pass prompt ingestion through the cached path (DecoderLM)
-        logits, cache = jax.jit(model.prefill)(params, cache, tokens)
-    else:
-        logits = None
-        for t in range(sp):
-            logits, cache = step_fn(params, cache, tokens[:, t : t + 1],
-                                    jnp.int32(t))
-    cur = _sample(logits, cfg, key)
-    out.append(cur[:, None])
-    for t in range(sp, sp + cfg.max_new_tokens - 1):
-        key, sub = jax.random.split(key)
-        logits, cache = step_fn(params, cache, cur[:, None], jnp.int32(t))
-        cur = _sample(logits, cfg, sub)
+    scope = planned_scope(mesh, strategy)
+    with scope:
+        if prefill_fn is None:
+            prefill_fn = _default_prefill(model, mesh, strategy)
+        if step_fn is None:
+            step_fn = _default_step(model, mesh, strategy)
+        with obs.span("serve.prefill", batch=b, seq=sp):
+            if offsets is not None:
+                logits, cache = prefill_fn(params, cache, tokens, offsets)
+            else:
+                logits, cache = prefill_fn(params, cache, tokens)
+        if cfg.max_new_tokens == 0:
+            return np.asarray(tokens)
+        cur = _sample(logits, cfg, key)
         out.append(cur[:, None])
+        for t in range(sp, sp + cfg.max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            with obs.span("serve.decode_step", batch=b, pos=t):
+                if offsets is not None:
+                    logits, cache = step_fn(params, cache, cur[:, None],
+                                            jnp.int32(t), offsets)
+                else:
+                    logits, cache = step_fn(params, cache, cur[:, None],
+                                            jnp.int32(t))
+            cur = _sample(logits, cfg, sub)
+            out.append(cur[:, None])
     return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def planned_scope(mesh, strategy: Optional[str] = None):
+    """The plan-routing scope ``generate`` decodes under: route through
+    ``planned_matmuls(mesh, strategy)`` when a multi-device mesh is given,
+    otherwise a null context (the local GSPMD baseline path)."""
+    if mesh is not None and getattr(mesh, "size", 1) > 1:
+        from repro.plan import planned_matmuls
+
+        return planned_matmuls(mesh, strategy)
+    return contextlib.nullcontext()
+
+
+@functools.lru_cache(maxsize=None)
+def _default_prefill(model, mesh=None, strategy: Optional[str] = None):
+    """Memoized per (model, mesh, strategy) prefill: one-pass for models
+    with ``prefill`` (DecoderLM), teacher-forced step loop otherwise
+    (recurrent families).
+
+    The plan scope is (re-)entered INSIDE the jitted closure, not just
+    around the call: JAX's trace cache is keyed on the traced callable,
+    and equal bound methods (``model.prefill``) would share a jaxpr traced
+    earlier WITHOUT the scope -- silently skipping plan routing.  A
+    closure per (model, mesh, strategy) gets its own trace-cache entry and
+    reads the contextvar while tracing; the memo makes repeated
+    ``generate`` calls with the same config reuse it instead of retracing.
+    """
+    if hasattr(model, "prefill"):
+        def prefill(params, cache, tokens, offsets=None):
+            with planned_scope(mesh, strategy):
+                if offsets is not None:
+                    return model.prefill(params, cache, tokens, offsets)
+                return model.prefill(params, cache, tokens)
+
+        return jax.jit(prefill)
+    step = _default_step(model, mesh, strategy)
+
+    def loop(params, cache, tokens):
+        logits = None
+        for t in range(tokens.shape[1]):
+            logits, cache = step(params, cache, tokens[:, t : t + 1],
+                                 jnp.int32(t))
+        return logits, cache
+
+    return loop
+
+
+@functools.lru_cache(maxsize=None)
+def _default_step(model, mesh=None, strategy: Optional[str] = None):
+    def step(params, cache, tokens, pos, offsets=None):
+        with planned_scope(mesh, strategy):
+            if offsets is not None:
+                return model.decode_step(params, cache, tokens, pos, offsets)
+            return model.decode_step(params, cache, tokens, pos)
+
+    return jax.jit(step)
 
 
 def _sample(logits: jax.Array, cfg: ServeConfig, key) -> jax.Array:
@@ -61,12 +190,32 @@ def _sample(logits: jax.Array, cfg: ServeConfig, key) -> jax.Array:
     )
 
 
-def batch_requests(prompt_list, pad_id: int = 0) -> Tuple[np.ndarray, np.ndarray]:
-    """Left-pad a list of variable-length prompts into one batch."""
+def batch_requests(
+    prompt_list: Sequence[Sequence[int]], pad_id: int = 0,
+    *, pad_to: Optional[int] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Left-pad a list of variable-length prompts into one (B, S) batch.
+
+    Returns ``(batch, lens)``: ``lens[i]`` is request i's true length --
+    pass it to ``generate(lens=...)`` so padded rows decode at their own
+    logical positions.  An empty request list yields an explicit empty
+    (0, 0) batch (generate returns it unchanged).  ``pad_to`` pads the
+    sequence axis to a fixed width (the bucket router's seq bucket).
+    """
+    if not prompt_list:
+        return (np.zeros((0, pad_to or 0), np.int32),
+                np.zeros((0,), np.int32))
     maxlen = max(len(p) for p in prompt_list)
+    if pad_to is not None:
+        if pad_to < maxlen:
+            raise ValueError(
+                f"pad_to={pad_to} shorter than longest prompt ({maxlen})")
+        maxlen = pad_to
     batch = np.full((len(prompt_list), maxlen), pad_id, np.int32)
     lens = np.zeros(len(prompt_list), np.int32)
     for i, pr in enumerate(prompt_list):
+        if len(pr) == 0:
+            raise ValueError(f"request {i} is empty; prompts need >= 1 token")
         batch[i, maxlen - len(pr):] = pr
         lens[i] = len(pr)
     return batch, lens

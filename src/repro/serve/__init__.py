@@ -1,0 +1,16 @@
+"""repro.serve -- production serving harness on the plan engine.
+
+``Server`` holds persistent compiled prefill/decode functions, AOT-warms a
+declared (batch, seq) bucket grid (filling the plan cache with each
+bucket's ``SchedulePlan``s), and routes incoming request batches to the
+nearest warm bucket via left-padding + position offsets.  See
+``repro.runtime.serve`` for the underlying decode loop and
+``benchmarks/serve_sweep.py`` for the config-matrix latency sweep.
+"""
+from .buckets import Bucket, as_bucket, bucket_grid, route
+from .server import DEFAULT_BUCKETS, Server, ServeResult, warmup
+
+__all__ = [
+    "Bucket", "as_bucket", "bucket_grid", "route",
+    "Server", "ServeResult", "warmup", "DEFAULT_BUCKETS",
+]

@@ -47,7 +47,10 @@ def test_serve_example_runs():
         capture_output=True, text=True, env=env, timeout=590, cwd=_ROOT,
     )
     assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
-    assert "generated" in res.stdout
+    # plan-routed serving: warm bucket hit + throughput line
+    assert "tok/s" in res.stdout
+    assert "bucket=4x16" in res.stdout
+    assert "hit rate 1.0" in res.stdout
 
 
 def test_dryrun_entry_single_cell():
