@@ -501,6 +501,74 @@ def _repo_root() -> str:
     return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+# -- repro.tune: measured autotuning vs the default_blocks heuristic --------
+
+
+def bench_tuned_vs_default() -> List[Row]:
+    """Tuned blocks vs ``default_blocks`` on three shapes: square, ragged,
+    and the MoE expert GEMM from ``configs/deepseek_moe_16b`` (per-token
+    expert d_model x moe_d_ff, clamped for CI).  The searched winner must
+    not lose to the heuristic beyond the ``TUNE_DRIFT_MARGIN`` noise
+    margin (default 10%) -- the search space contains the heuristic's own
+    blocks, so a regression means the measurement harness lies."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.kernels.matmul import matmul
+    from repro.tune import Tuner
+
+    margin = float(os.environ.get("TUNE_DRIFT_MARGIN", "0.10"))
+    interpret = jax.default_backend() not in ("tpu", "gpu")
+    cfg = get_config("deepseek_moe_16b")
+    shapes = (
+        ("square", (256, 256, 256)),
+        ("ragged", (384, 128, 256)),
+        ("moe_expert", (128, min(cfg.moe_d_ff, 512), min(cfg.d_model, 512))),
+    )
+    tuner = Tuner(reps=3, max_candidates=8, interpret=interpret)
+
+    def best_us(fn, reps: int = 5) -> float:
+        # min-of-N, not mean: interpret-mode dispatch has heavy-tailed
+        # stragglers that would swamp the 10% gate with pure noise
+        fn()
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts) * 1e6
+
+    rows: List[Row] = []
+    for label, (m, n, k) in shapes:
+        a = jnp.ones((m, k), jnp.bfloat16)
+        b = jnp.ones((k, n), jnp.bfloat16)
+        entry = tuner.entry_for(m, n, k, dtype="bfloat16")
+
+        def run_default():
+            jax.block_until_ready(matmul(a, b, interpret=interpret))
+
+        def run_tuned():
+            jax.block_until_ready(matmul(
+                a, b, block_m=entry.block_m, block_n=entry.block_n,
+                block_k=entry.block_k, order=entry.order,
+                interpret=interpret))
+
+        default_us = best_us(run_default)
+        tuned_us = best_us(run_tuned)
+        speedup = default_us / max(tuned_us, 1e-9)
+        rows.append((f"tuned_vs_default_{label}", tuned_us,
+                     f"default_us={default_us:.1f};tuned_us={tuned_us:.1f};"
+                     f"speedup={speedup:.2f}x;blocks={entry.label};"
+                     f"margin={margin:.2f}"))
+        if speedup < 1.0 - margin:
+            raise RuntimeError(
+                f"tuned blocks regressed on {label} ({m}x{n}x{k}): "
+                f"{tuned_us:.1f}us vs default {default_us:.1f}us "
+                f"(speedup {speedup:.2f}x < {1.0 - margin:.2f}x)")
+    return rows
+
+
 ALL_BENCHES = (
     bench_cannon_solver,
     bench_cannon_comm,
@@ -515,6 +583,13 @@ ALL_BENCHES = (
     bench_plan_dispatch,
     bench_overlap_vs_staged,
     bench_fattree_vs_flat,
+    bench_tuned_vs_default,
+)
+
+# bounded autotuning subset (`benchmarks/run.py --tune-smoke`): interpret-
+# mode searches on forced-host CPU; gates the measured-autotuning path
+TUNE_BENCHES = (
+    bench_tuned_vs_default,
 )
 
 # tiny-shape subset for CI (`benchmarks/run.py --smoke`): no big compiles,

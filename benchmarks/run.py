@@ -24,8 +24,15 @@ nonzero on any non-conforming cell.
 ``--drift [machine_profile.json]`` runs ``repro.verify.drift`` on forced-
 host devices (``DRIFT_DEVICES`` env, default 8): obs recorder ==
 interceptor == trace on live executions, plus calibrated-ranking stability
-against the stored profile when one is given.  Writes drift_report.json;
-exits nonzero on divergence.
+against the stored profile when one is given.  When the stored profile
+embeds a ``repro.tune`` TuningTable, the tuning leg re-measures each
+stored bucket and fails on winners stale beyond the same 10% noise
+margin.  Writes drift_report.json; exits nonzero on divergence.
+
+``--tune-smoke`` runs the kernel-autotuning bench subset (bounded
+interpret-mode searches; tuned vs default blocks must not regress beyond
+the noise margin) and writes bench_results_tune.json.  Exits nonzero on
+any bench error -- the CI gate for the measured-autotuning path.
 """
 from __future__ import annotations
 
@@ -95,11 +102,18 @@ def run_drift(argv) -> int:
         mark = "FLIP" if r["flipped"] else "ok"
         print(f"# ranking {shape}: stored={r['stored_top']} "
               f"fresh={r['fresh_top']} margin={r['margin']:.3f} [{mark}]")
+    for r in report.get("tuning", []):
+        bucket = "x".join(str(s) for s in r["bucket"])
+        mark = "FLIP" if r["flipped"] else "ok"
+        print(f"# tuning {r['dtype']} {bucket}: stored={r['stored']} "
+              f"fresh={r['fresh']} margin={r['margin']:.3f} [{mark}]")
     with open("drift_report.json", "w") as f:
         json.dump(report, f, indent=1)
     print(f"# drift {'OK' if report['ok'] else 'DIVERGED'} "
           f"({len(report['cells'])} cells, "
-          f"{sum(r['flipped'] for r in report['ranking'])} ranking flips)")
+          f"{sum(r['flipped'] for r in report['ranking'])} ranking flips, "
+          f"{sum(r['flipped'] for r in report.get('tuning', []))} "
+          f"tuning flips)")
     return 0 if report["ok"] else 1
 
 
@@ -159,10 +173,13 @@ def main(argv=None) -> int:
             return 2
         return run_report(argv[i + 1])
 
-    from benchmarks.paper_benches import ALL_BENCHES, SMOKE_BENCHES
+    from benchmarks.paper_benches import (ALL_BENCHES, SMOKE_BENCHES,
+                                          TUNE_BENCHES)
 
     smoke = "--smoke" in argv
-    benches = SMOKE_BENCHES if smoke else ALL_BENCHES
+    tune = "--tune-smoke" in argv
+    benches = TUNE_BENCHES if tune else (
+        SMOKE_BENCHES if smoke else ALL_BENCHES)
 
     from repro import obs
 
@@ -186,7 +203,8 @@ def main(argv=None) -> int:
                 rows.append({"schema": SCHEMA_VERSION,
                              "name": bench.__name__, "error": str(e)})
                 errors += 1
-    out = "bench_results_smoke.json" if smoke else "bench_results.json"
+    out = ("bench_results_tune.json" if tune else
+           "bench_results_smoke.json" if smoke else "bench_results.json")
     with open(out, "w") as f:
         json.dump(rows, f, indent=1)
     if smoke:
@@ -194,7 +212,7 @@ def main(argv=None) -> int:
         obs.write_trace("bench_trace.json", rec)
         obs.write_metrics("bench_metrics.json", rec)
         print("# wrote bench_trace.json bench_metrics.json")
-    return 1 if (smoke and errors) else 0
+    return 1 if ((smoke or tune) and errors) else 0
 
 
 if __name__ == "__main__":

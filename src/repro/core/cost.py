@@ -122,7 +122,7 @@ MXU_DIM = 128             # systolic array tile edge
 def calibrated_total_s(flops: float, comm_bytes: float, msgs: float, *,
                        alpha_s: float, bw_bytes_per_s: float,
                        peak_flops: float, overlapped: bool,
-                       comm_terms=None) -> float:
+                       comm_terms=None, compute_s=None) -> float:
     """Calibrated seconds for one strategy cell: the analytic word/message
     counts priced with *measured* machine parameters (a fitted
     ``repro.obs.profile.MachineProfile``) instead of the datasheet
@@ -141,8 +141,14 @@ def calibrated_total_s(flops: float, comm_bytes: float, msgs: float, *,
     tuples (one per mesh axis the strategy moves words over), summed into
     the communication time.  The pooled ``alpha_s``/``bw_bytes_per_s``/
     ``comm_bytes``/``msgs`` arguments are ignored in that case.
+
+    ``compute_s``, when given, replaces the peak-FLOPs roofline with a
+    *measured* compute time -- the ``repro.tune`` path: tuned kernel
+    seconds on the compute side of the same max/sum combination the
+    calibrated comm terms sit on.
     """
-    compute_s = flops / max(peak_flops, 1e-9)
+    if compute_s is None:
+        compute_s = flops / max(peak_flops, 1e-9)
     if comm_terms is not None:
         comm_s = sum(ms * a + b / max(bw, 1e-9)
                      for a, bw, b, ms in comm_terms)

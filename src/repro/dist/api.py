@@ -315,19 +315,23 @@ def choose(m: int, n: int, k: int, *, tp: Optional[int] = None, mesh=None,
 def symmetric_matmul(a: jax.Array, b: jax.Array, *, mesh=None,
                      strategy: Optional[str] = None,
                      out_dtype=None,
+                     tuning=None,
                      overlap: Optional[bool] = None) -> jax.Array:
     """Global (batch..., M, K) x (K, N) matmul dispatched through the plan
     engine: strategy picked by the cost model over the mesh-applicable
     candidates (or forced via ``strategy``), plan memoized in the plan
-    cache, leading batch dims folded before planning.  ``overlap`` forces
-    the double-buffered (``True``) or staged (``False``) lowering; the
-    default lets the planner pick (see ``repro.plan.build_plan``)."""
+    cache, leading batch dims folded before planning.  ``tuning`` (a
+    ``repro.tune`` table or ``Tuner``) prices the compute side of the
+    ranking with measured kernel seconds and folds the winning blocks into
+    the plan's tiling.  ``overlap`` forces the double-buffered (``True``)
+    or staged (``False``) lowering; the default lets the planner pick
+    (see ``repro.plan.build_plan``)."""
     from repro.plan import build_plan, execute_plan
 
     plan = build_plan(
         a.shape[-2], b.shape[-1], a.shape[-1], mesh=mesh, strategy=strategy,
         batch=tuple(a.shape[:-2]),
         a_dtype=a.dtype, b_dtype=b.dtype, out_dtype=out_dtype,
-        overlap=overlap,
+        tuning=tuning, overlap=overlap,
     )
     return execute_plan(plan, a, b)

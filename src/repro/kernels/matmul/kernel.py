@@ -102,26 +102,31 @@ def zorder_matmul(
 
 
 def vmem_working_set_bytes(
-    block_m: int, block_n: int, block_k: int, dtype_bytes: int = 2
+    block_m: int, block_n: int, block_k: int, dtype_bytes: int = 2,
+    out_dtype_bytes: int | None = None,
 ) -> int:
     """VMEM bytes claimed by one grid step (A, B blocks + fp32 acc + out).
 
+    ``dtype_bytes`` is the *input* element width; the output block is sized
+    by ``out_dtype_bytes`` when it differs (the accumulator is always fp32).
     Must fit the ~128 MiB v5e VMEM with double-buffering headroom (x2 on the
     streamed inputs)."""
     a = block_m * block_k * dtype_bytes * 2  # double-buffered
     b = block_k * block_n * dtype_bytes * 2
     acc = block_m * block_n * 4
-    out = block_m * block_n * dtype_bytes
+    out = block_m * block_n * (out_dtype_bytes or dtype_bytes)
     return a + b + acc + out
 
 
-def default_blocks(m: int, n: int, k: int, dtype_bytes: int = 2) -> Tuple[int, int, int]:
+def default_blocks(m: int, n: int, k: int, dtype_bytes: int = 2,
+                   out_dtype_bytes: int | None = None) -> Tuple[int, int, int]:
     """Pick MXU-aligned blocks that fit VMEM; prefers large k blocks (the
     contraction reuse direction) then square-ish (m, n)."""
     bm = min(256, max(128, m))
     bn = min(256, max(128, n))
     bk = min(2048, max(128, k))
-    while vmem_working_set_bytes(bm, bn, bk, dtype_bytes) > 96 * 1024 * 1024:
+    while vmem_working_set_bytes(bm, bn, bk, dtype_bytes,
+                                 out_dtype_bytes) > 96 * 1024 * 1024:
         if bk > 256:
             bk //= 2
         elif bm >= bn and bm > 128:

@@ -28,6 +28,17 @@ from .ref import matmul_ref
 _MIN_TILE = 128
 
 
+def _resolve_blocks(m, n, k, dtype_bytes, out_dtype_bytes,
+                    block_m, block_n, block_k):
+    """The block shapes the kernel will actually run: VMEM-fitting defaults
+    sized by the real input/output byte widths, explicit overrides winning,
+    everything clamped to the problem dims.  Shared by the jit'd kernel path
+    and the eager pad-waste accounting so both see the same blocks."""
+    bm, bn, bk = default_blocks(m, n, k, dtype_bytes, out_dtype_bytes)
+    bm, bn, bk = block_m or bm, block_n or bn, block_k or bk
+    return min(bm, m), min(bn, n), min(bk, k)
+
+
 def matmul(
     a: jax.Array,
     b: jax.Array,
@@ -57,6 +68,15 @@ def matmul(
     obs.counter("kernel.matmul.flops").inc(flops)
     obs.histogram("kernel.matmul.roofline_fraction").observe(
         flops / dt / PEAK_FLOPS_BF16)
+    if min(m, n, k) >= _MIN_TILE:
+        # ragged shapes are padded to block multiples silently inside the
+        # jit; surface the overhead as padded FLOPs / useful FLOPs
+        dbytes = jnp.dtype(a.dtype).itemsize
+        obytes = jnp.dtype(out_dtype or a.dtype).itemsize
+        bm, bn, bk = _resolve_blocks(m, n, k, dbytes, obytes,
+                                     block_m, block_n, block_k)
+        padded = (m + (-m) % bm) * (n + (-n) % bn) * (k + (-k) % bk)
+        obs.histogram("kernel.pad_waste").observe(padded / (m * n * k))
     return out
 
 
@@ -82,9 +102,9 @@ def _matmul_jit(
     if min(m, n, k) < _MIN_TILE:
         return matmul_ref(a, b, out_dtype=out_dtype)
     dbytes = jnp.dtype(a.dtype).itemsize
-    bm, bn, bk = default_blocks(m, n, k, dbytes)
-    bm, bn, bk = block_m or bm, block_n or bn, block_k or bk
-    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    obytes = jnp.dtype(out_dtype or a.dtype).itemsize
+    bm, bn, bk = _resolve_blocks(m, n, k, dbytes, obytes,
+                                 block_m, block_n, block_k)
 
     pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
     ap = jnp.pad(a, ((0, pm), (0, pk))) if (pm or pk) else a

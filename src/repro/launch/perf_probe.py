@@ -13,6 +13,13 @@ machine-profile JSON:
     PYTHONPATH=src python -m repro.launch.perf_probe \
         --profile-out machine_profile.json --devices 8 --mesh-shape 2x2
 
+``--tune`` additionally runs the measured kernel autotune search
+(``repro.tune``) over ``--tune-shapes`` and embeds the resulting
+``TuningTable`` in the profile (and, with ``--tune-out``, as its own
+artifact) -- one probe run yields both calibration halves: fitted α–β
+links for the comm side and measured kernel seconds for the compute side
+of ``calibrated_total_s``.
+
 The legacy perf-iteration mode (lower ONE arch x shape cell with config
 overrides and print the roofline terms; the Sec.-Perf hillclimb driver)
 is selected by ``--arch``:
@@ -73,6 +80,23 @@ def calibrate_main(args) -> None:
                              devices=devs[:math.prod(shape)])
     tree_axes = tuple(a for a in args.tree_axes.split(",") if a)
     profile = probe_links(mesh, reps=args.reps, tree_axes=tree_axes)
+    if args.tune:
+        import dataclasses
+
+        from repro.tune import Tuner, save_table
+
+        tuner = Tuner(reps=args.tune_reps,
+                      max_candidates=args.tune_candidates or None)
+        for spec in args.tune_shapes.split(","):
+            if not spec:
+                continue
+            tm, tn, tk = _parse_mesh_shape(spec)
+            tuner.entry_for(tm, tn, tk, dtype=args.tune_dtype)
+        table = tuner.table()
+        profile = dataclasses.replace(profile, tuning=table)
+        if args.tune_out:
+            save_table(table, args.tune_out)
+            print(f"# wrote {args.tune_out}")
     save_profile(profile, args.profile_out)
     print(json.dumps(profile.to_json(), indent=1, sort_keys=True))
     print(f"# wrote {args.profile_out}")
@@ -144,6 +168,17 @@ def main() -> None:
     ap.add_argument("--tree-axes", default="",
                     help="comma-separated inter-pod (DCN-class) mesh axes; "
                          "pooled into a 'dcn' link class instead of 'ici'")
+    ap.add_argument("--tune", action="store_true",
+                    help="also run the kernel autotune search and embed "
+                         "the TuningTable in the profile")
+    ap.add_argument("--tune-shapes", default="256x256x256,384x128x256",
+                    help="comma-separated MxNxK shapes to tune")
+    ap.add_argument("--tune-reps", type=int, default=3)
+    ap.add_argument("--tune-candidates", type=int, default=8,
+                    help="bound the per-shape candidate search (0 = full)")
+    ap.add_argument("--tune-dtype", default="float32")
+    ap.add_argument("--tune-out", default="",
+                    help="also write the TuningTable as its own JSON")
     # legacy cell-probe mode (selected by --arch)
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -112,6 +112,30 @@ def serve_sweep_table(data):
     return "\n".join(rows)
 
 
+def kernel_metrics_table(metrics):
+    """Kernel-side health rows from an ``obs.write_metrics`` snapshot:
+    per-call microseconds, roofline fraction, the ragged-shape padding
+    waste ratio (padded/useful FLOPs; 1.0 = no waste), and autotune
+    candidate timings when a search ran in-process."""
+    names = ("kernel.matmul.us", "kernel.matmul.roofline_fraction",
+             "kernel.pad_waste", "tune.candidate_us")
+    rows = [
+        "| metric | n | mean | min | max |",
+        "|---|---|---|---|---|",
+    ]
+    found = False
+    for name in names:
+        v = metrics.get(name)
+        if not isinstance(v, dict):
+            continue
+        found = True
+        rows.append(f"| {name} | {v['count']} | {fmt(v['mean'])} | "
+                    f"{fmt(v['min'])} | {fmt(v['max'])} |")
+    if not found:
+        rows.append("| (no kernel metrics recorded) | - | - | - | - |")
+    return "\n".join(rows)
+
+
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results_v2.json"
     with open(path) as f:
@@ -122,6 +146,11 @@ def main():
               f"(max_new={cfg['max_new_tokens']}, "
               f"{cfg['devices']} devices)\n")
         print(serve_sweep_table(data))
+        return
+    if "metrics" in data and "cells" not in data:
+        # an obs.write_metrics snapshot (e.g. bench_metrics.json)
+        print(f"### Kernel metrics (schema {data.get('schema', '?')})\n")
+        print(kernel_metrics_table(data["metrics"]))
         return
     cells = data["cells"]
     print("### Roofline (single-pod 16x16)\n")

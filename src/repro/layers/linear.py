@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.local import local_matmul
-from repro.plan.context import planned_mesh, planned_strategy
+from repro.plan.context import planned_mesh, planned_strategy, planned_tuning
 
 
 def linear_params(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
@@ -32,5 +32,6 @@ def linear(x: jax.Array, w: jax.Array) -> jax.Array:
         from repro.dist.api import symmetric_matmul
 
         return symmetric_matmul(x, w, mesh=mesh, out_dtype=x.dtype,
-                                strategy=planned_strategy())
+                                strategy=planned_strategy(),
+                                tuning=planned_tuning())
     return local_matmul(x, w, out_dtype=x.dtype)

@@ -36,13 +36,20 @@ class LinkParams:
 
 @dataclasses.dataclass(frozen=True)
 class MachineProfile:
-    """Calibrated machine parameters the planner ranks with."""
+    """Calibrated machine parameters the planner ranks with.
+
+    ``tuning`` optionally embeds a ``repro.tune.TuningTable`` (the
+    ``perf_probe --tune`` artifact): ``build_plan(profile=...)`` then
+    prices the compute side with measured kernel seconds wherever the
+    table covers the local bucket, alongside the fitted α–β comm terms --
+    the repo's two calibration loops in one ranking."""
 
     platform: str
     peak_flops: float
     links: Tuple[Tuple[str, LinkParams], ...]
     created: str = ""
     schema: int = PROFILE_SCHEMA
+    tuning: Optional[object] = None  # repro.tune.TuningTable (lazy import)
 
     def link(self, name: str = "ici") -> LinkParams:
         """Params for ``name``, falling back to the first link class (a
@@ -54,11 +61,14 @@ class MachineProfile:
             return self.links[0][1]
         raise ValueError(f"profile has no link classes (wanted {name!r})")
 
-    def seconds(self, est, link: str = "ici") -> float:
+    def seconds(self, est, link: str = "ici", *,
+                compute_s: Optional[float] = None) -> float:
         """Calibrated total seconds for an analytic ``dist.api.Estimate``:
         compute from the measured peak FLOPs, communication from the fitted
         α–β applied to the estimate's bytes and message count, combined
-        with the estimate's own overlap rule.
+        with the estimate's own overlap rule.  ``compute_s`` substitutes a
+        measured compute time (tuned kernel seconds -- the planner derives
+        it from ``tuning`` per local shape) for the roofline term.
 
         When the estimate carries per-axis terms (``est.comm_by_axis``) AND
         this profile has a fitted ``axis:{name}`` link class for *every*
@@ -82,10 +92,10 @@ class MachineProfile:
             est.comm_bytes, est.msgs,
             alpha_s=lp.alpha_s, bw_bytes_per_s=lp.bw_bytes_per_s,
             peak_flops=self.peak_flops, overlapped=est.overlapped,
-            comm_terms=terms)
+            comm_terms=terms, compute_s=compute_s)
 
     def to_json(self) -> Dict:
-        return {
+        obj = {
             "schema": self.schema,
             "platform": self.platform,
             "peak_flops": self.peak_flops,
@@ -94,6 +104,9 @@ class MachineProfile:
                           "bw_bytes_per_s": p.bw_bytes_per_s}
                       for n, p in self.links},
         }
+        if self.tuning is not None:
+            obj["tuning"] = self.tuning.to_json()
+        return obj
 
     @classmethod
     def from_json(cls, obj: Dict) -> "MachineProfile":
@@ -102,6 +115,12 @@ class MachineProfile:
             raise ValueError(
                 f"machine profile schema {schema} is newer than supported "
                 f"{PROFILE_SCHEMA}; re-run calibration")
+        tuning = None
+        if obj.get("tuning"):
+            # lazy import: repro.tune is jax-adjacent and cyclic with obs
+            from repro.tune.table import TuningTable
+
+            tuning = TuningTable.from_json(obj["tuning"])
         return cls(
             platform=obj.get("platform", "unknown"),
             peak_flops=float(obj["peak_flops"]),
@@ -111,6 +130,7 @@ class MachineProfile:
                 for n, p in obj.get("links", {}).items())),
             created=obj.get("created", ""),
             schema=schema or PROFILE_SCHEMA,
+            tuning=tuning,
         )
 
 

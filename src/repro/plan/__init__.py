@@ -45,9 +45,11 @@ x @ w products through it.
 """
 from .cache import (PlanCache, cache_clear, cache_info, cache_stats,
                     plan_cache)
-from .context import planned_matmuls, planned_mesh, planned_strategy
+from .context import (planned_matmuls, planned_mesh, planned_strategy,
+                      planned_tuning)
 from .ir import (SchedulePlan, TilingPlan, TorusProgram, build_plan,
-                 mesh_candidates, mesh_fingerprint, rank_mesh_strategies)
+                 mesh_candidates, mesh_fingerprint, rank_mesh_strategies,
+                 strategy_seconds)
 from .lower_pallas import lower_pallas, lower_tiling
 from .lower_shard_map import execute_plan, lower_shard_map, on_lower
 
@@ -59,9 +61,10 @@ from repro.dist.api import Estimate, estimate  # noqa: E402  (cycle-safe)
 __all__ = [
     "SchedulePlan", "TilingPlan", "TorusProgram", "build_plan",
     "mesh_candidates", "mesh_fingerprint", "rank_mesh_strategies",
+    "strategy_seconds",
     "execute_plan", "lower_shard_map", "on_lower", "lower_pallas",
     "lower_tiling",
     "PlanCache", "plan_cache", "cache_stats", "cache_info", "cache_clear",
-    "planned_matmuls", "planned_mesh", "planned_strategy",
+    "planned_matmuls", "planned_mesh", "planned_strategy", "planned_tuning",
     "Estimate", "estimate",
 ]

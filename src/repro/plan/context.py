@@ -17,7 +17,8 @@ import contextlib
 from contextvars import ContextVar
 from typing import Optional, Tuple
 
-_PLAN_SCOPE: ContextVar[Optional[Tuple[object, Optional[str]]]] = ContextVar(
+_PLAN_SCOPE: ContextVar[
+    Optional[Tuple[object, Optional[str], Optional[object]]]] = ContextVar(
     "repro_plan_scope", default=None)
 
 
@@ -34,12 +35,21 @@ def planned_strategy() -> Optional[str]:
     return None if scope is None else scope[1]
 
 
+def planned_tuning():
+    """The tuning table/tuner the enclosing ``planned_matmuls`` scope
+    supplies to ``build_plan``, or None (peak-FLOPs compute model)."""
+    scope = _PLAN_SCOPE.get()
+    return None if scope is None else scope[2]
+
+
 @contextlib.contextmanager
-def planned_matmuls(mesh, strategy: Optional[str] = None):
+def planned_matmuls(mesh, strategy: Optional[str] = None, tuning=None):
     """Route layer matmuls through ``repro.plan`` on ``mesh`` within scope;
     ``strategy`` optionally pins the schedule instead of cost-model
-    ranking (validated per shape by ``build_plan`` at dispatch time)."""
-    token = _PLAN_SCOPE.set((mesh, strategy))
+    ranking (validated per shape by ``build_plan`` at dispatch time);
+    ``tuning`` (a ``repro.tune`` table or live ``Tuner``) prices the
+    compute side of in-scope plans with measured kernel seconds."""
+    token = _PLAN_SCOPE.set((mesh, strategy, tuning))
     try:
         yield mesh
     finally:

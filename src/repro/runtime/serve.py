@@ -70,6 +70,7 @@ def generate(
     *,
     mesh=None,
     strategy: Optional[str] = None,
+    tuning=None,
     lens: Optional[np.ndarray] = None,
     prefill_fn=None,
     step_fn=None,
@@ -77,7 +78,9 @@ def generate(
     """prompts: (B, S_prompt) int32 -> (B, S_prompt + max_new_tokens).
 
     ``mesh`` routes the forward through ``planned_matmuls`` (see module
-    docstring); ``strategy`` pins the schedule inside that scope.  ``lens``
+    docstring); ``strategy`` pins the schedule inside that scope;
+    ``tuning`` (a ``repro.tune`` table or ``Tuner``) prices in-scope plans
+    with measured kernel seconds.  ``lens``
     gives per-request true lengths of a left-padded batch; models with
     ``supports_position_offsets`` then decode each row at its own logical
     positions.  ``prefill_fn``/``step_fn`` inject persistent compiled
@@ -97,12 +100,12 @@ def generate(
 
     tokens = jnp.asarray(prompts, jnp.int32)
     out = [tokens]
-    scope = planned_scope(mesh, strategy)
+    scope = planned_scope(mesh, strategy, tuning)
     with scope:
         if prefill_fn is None:
-            prefill_fn = _default_prefill(model, mesh, strategy)
+            prefill_fn = _default_prefill(model, mesh, strategy, tuning)
         if step_fn is None:
-            step_fn = _default_step(model, mesh, strategy)
+            step_fn = _default_step(model, mesh, strategy, tuning)
         with obs.span("serve.prefill", batch=b, seq=sp):
             if offsets is not None:
                 logits, cache = prefill_fn(params, cache, tokens, offsets)
@@ -126,19 +129,20 @@ def generate(
     return np.asarray(jnp.concatenate(out, axis=1))
 
 
-def planned_scope(mesh, strategy: Optional[str] = None):
+def planned_scope(mesh, strategy: Optional[str] = None, tuning=None):
     """The plan-routing scope ``generate`` decodes under: route through
-    ``planned_matmuls(mesh, strategy)`` when a multi-device mesh is given,
-    otherwise a null context (the local GSPMD baseline path)."""
+    ``planned_matmuls(mesh, strategy, tuning)`` when a multi-device mesh is
+    given, otherwise a null context (the local GSPMD baseline path)."""
     if mesh is not None and getattr(mesh, "size", 1) > 1:
         from repro.plan import planned_matmuls
 
-        return planned_matmuls(mesh, strategy)
+        return planned_matmuls(mesh, strategy, tuning)
     return contextlib.nullcontext()
 
 
 @functools.lru_cache(maxsize=None)
-def _default_prefill(model, mesh=None, strategy: Optional[str] = None):
+def _default_prefill(model, mesh=None, strategy: Optional[str] = None,
+                     tuning=None):
     """Memoized per (model, mesh, strategy) prefill: one-pass for models
     with ``prefill`` (DecoderLM), teacher-forced step loop otherwise
     (recurrent families).
@@ -147,19 +151,20 @@ def _default_prefill(model, mesh=None, strategy: Optional[str] = None):
     around the call: JAX's trace cache is keyed on the traced callable,
     and equal bound methods (``model.prefill``) would share a jaxpr traced
     earlier WITHOUT the scope -- silently skipping plan routing.  A
-    closure per (model, mesh, strategy) gets its own trace-cache entry and
+    closure per (model, mesh, strategy, tuning) gets its own trace-cache
+    entry and
     reads the contextvar while tracing; the memo makes repeated
     ``generate`` calls with the same config reuse it instead of retracing.
     """
     if hasattr(model, "prefill"):
         def prefill(params, cache, tokens, offsets=None):
-            with planned_scope(mesh, strategy):
+            with planned_scope(mesh, strategy, tuning):
                 if offsets is not None:
                     return model.prefill(params, cache, tokens, offsets)
                 return model.prefill(params, cache, tokens)
 
         return jax.jit(prefill)
-    step = _default_step(model, mesh, strategy)
+    step = _default_step(model, mesh, strategy, tuning)
 
     def loop(params, cache, tokens):
         logits = None
@@ -172,9 +177,10 @@ def _default_prefill(model, mesh=None, strategy: Optional[str] = None):
 
 
 @functools.lru_cache(maxsize=None)
-def _default_step(model, mesh=None, strategy: Optional[str] = None):
+def _default_step(model, mesh=None, strategy: Optional[str] = None,
+                  tuning=None):
     def step(params, cache, tokens, pos, offsets=None):
-        with planned_scope(mesh, strategy):
+        with planned_scope(mesh, strategy, tuning):
             if offsets is not None:
                 return model.decode_step(params, cache, tokens, pos, offsets)
             return model.decode_step(params, cache, tokens, pos)

@@ -86,6 +86,7 @@ class Server:
 
     def __init__(self, model, params, cfg: ServeConfig, *, mesh=None,
                  strategy: Optional[str] = None,
+                 tuning=None,
                  buckets: Sequence = DEFAULT_BUCKETS,
                  pad_id: int = 0, dummy_token: int = 1):
         self.model = model
@@ -93,6 +94,7 @@ class Server:
         self.cfg = cfg
         self.mesh = mesh
         self.strategy = strategy
+        self.tuning = tuning
         self.pad_id = pad_id
         self.dummy_token = dummy_token
         self.buckets: Tuple[Bucket, ...] = tuple(
@@ -104,11 +106,15 @@ class Server:
         # ONE persistent compiled function pair for the server's lifetime;
         # the plan scope lives INSIDE the jitted closure so this server's
         # trace-cache entries are its own (see runtime.serve._default_*)
-        self._prefill = _default_prefill(model, mesh, strategy)
-        self._step = _default_step(model, mesh, strategy)
+        self._prefill = _default_prefill(model, mesh, strategy, tuning)
+        self._step = _default_step(model, mesh, strategy, tuning)
         # per-bucket plan snapshot: key -> SchedulePlan inserted by warmup
         self._bucket_plans: Dict[Bucket, Dict] = {}
+        # per-bucket tuning keys the warmup searches populated (a live
+        # Tuner tunes each bucket's local kernel shapes at trace time)
+        self._bucket_tune_keys: Dict[Bucket, Tuple] = {}
         self._warm_cache_info: Optional[Dict[str, int]] = None
+        self._warm_tune_stats: Optional[Dict[str, int]] = None
 
     # -- warmup --------------------------------------------------------------
 
@@ -131,19 +137,24 @@ class Server:
         if obs.enabled():
             obs.counter("serve.warmup.buckets").inc(len(buckets))
         self._warm_cache_info = plan_cache.info()
+        if self.tuning is not None and hasattr(self.tuning, "stats"):
+            self._warm_tune_stats = dict(self.tuning.stats)
         return report
 
     def _warm_bucket(self, bucket: Bucket) -> int:
         """Trace/compile one bucket's programs; snapshot the plan-cache
         entries it inserted so the router can probe (and re-pin) them."""
         before = set(plan_cache.keys())
+        tune_before = (set(self.tuning.keys())
+                       if self.tuning is not None
+                       and hasattr(self.tuning, "keys") else set())
         toks = jnp.full((bucket.batch, bucket.seq), self.dummy_token,
                         jnp.int32)
         cache = self.model.init_cache(bucket.batch, self.cfg.max_seq)
         offsets = (jnp.zeros((bucket.batch,), jnp.int32)
                    if self._uses_offsets else None)
         key = jax.random.PRNGKey(0)
-        with planned_scope(self.mesh, self.strategy):
+        with planned_scope(self.mesh, self.strategy, self.tuning):
             with obs.span("serve.warmup", bucket=bucket.label):
                 logits, cache = self._call_prefill(cache, toks, offsets)
                 # two steps, not one: step 2's inputs carry the shardings
@@ -162,6 +173,12 @@ class Server:
         # a later bucket can share plans with an earlier one (same decode
         # batch): extend instead of replace so probes cover the union
         self._bucket_plans.setdefault(bucket, {}).update(snapshot)
+        if self.tuning is not None and hasattr(self.tuning, "keys"):
+            new_tune = tuple(k for k in self.tuning.keys()
+                             if k not in tune_before)
+            prev = self._bucket_tune_keys.get(bucket, ())
+            self._bucket_tune_keys[bucket] = prev + tuple(
+                k for k in new_tune if k not in prev)
         return len(new_keys)
 
     # -- serving -------------------------------------------------------------
@@ -206,7 +223,7 @@ class Server:
 
         out = [tokens]
         step_lat: List[float] = []
-        with planned_scope(self.mesh, self.strategy):
+        with planned_scope(self.mesh, self.strategy, self.tuning):
             with obs.span("serve.prefill", batch=b_rows, seq=sp):
                 logits, cache = self._call_prefill(cache, tokens, offsets)
             if self.cfg.max_new_tokens > 0:
@@ -263,7 +280,14 @@ class Server:
                 plan_cache.put(k, snapshot[k])
         if missing and obs.enabled():
             obs.counter("serve.plan_repin").inc(len(missing))
-        return {"probed": len(snapshot), "missing": len(missing)}
+        out = {"probed": len(snapshot), "missing": len(missing)}
+        if self.tuning is not None and hasattr(self.tuning, "lookup_key"):
+            tune_keys = self._bucket_tune_keys.get(bucket, ())
+            tune_missing = [k for k in tune_keys
+                            if self.tuning.lookup_key(k) is None]
+            out["tune_probed"] = len(tune_keys)
+            out["tune_missing"] = len(tune_missing)
+        return out
 
     def cache_report(self) -> Dict:
         """Plan-cache accounting split at the warmup boundary: the serve
@@ -280,6 +304,22 @@ class Server:
                 "hits": hits, "misses": misses,
                 "hit_rate": (hits / total) if total else None,
             }
+        if self.tuning is not None and hasattr(self.tuning, "stats"):
+            stats = dict(self.tuning.stats)
+            tun: Dict = {
+                "entries": len(self.tuning.keys())
+                if hasattr(self.tuning, "keys") else None,
+                "stats": stats,
+            }
+            if self._warm_tune_stats is not None:
+                hits = stats["hits"] - self._warm_tune_stats["hits"]
+                misses = stats["misses"] - self._warm_tune_stats["misses"]
+                total = hits + misses
+                tun["serve_window"] = {
+                    "hits": hits, "misses": misses,
+                    "hit_rate": (hits / total) if total else None,
+                }
+            rep["tuning"] = tun
         return rep
 
     # -- internals -----------------------------------------------------------
@@ -296,12 +336,12 @@ class Server:
 
 def warmup(model, params, cfg: ServeConfig, *, mesh=None,
            buckets: Sequence = DEFAULT_BUCKETS,
-           strategy: Optional[str] = None) -> Server:
+           strategy: Optional[str] = None, tuning=None) -> Server:
     """Build a ``Server`` and AOT-warm its bucket grid in one call:
     ``server = warmup(model, params, cfg, mesh=mesh, buckets=[(8, 32)])``.
     Returns the warmed server (its ``warmup_report`` attribute holds the
     per-bucket accounting)."""
     server = Server(model, params, cfg, mesh=mesh, strategy=strategy,
-                    buckets=buckets)
+                    tuning=tuning, buckets=buckets)
     server.warmup_report = server.warmup()
     return server

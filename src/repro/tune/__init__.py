@@ -1,0 +1,27 @@
+"""repro.tune -- measured Pallas-kernel autotuning for the planner.
+
+The calibrated cost model (PR 6/8) measures the *communication* side of
+``calibrated_total_s``; this package measures the *compute* side.  A search
+over the (block_m, block_n, block_k, order) space of ``kernels/matmul`` --
+MXU-aligned, VMEM-feasible candidates, median-of-k timed -- lands winners
+in a versioned :class:`TuningTable` keyed by device-kind x dtype x
+padded-shape bucket.  ``build_plan(tuning=...)`` (or a ``MachineProfile``
+with an embedded table) then ranks strategies and resolves overlap with
+measured kernel seconds against calibrated comm seconds, and folds the
+winning blocks into the plan's ``TilingPlan`` for ``lower_pallas``.
+"""
+from .search import (BLOCK_CANDIDATES, BLOCK_K_CANDIDATES, ORDERS,
+                     VMEM_BUDGET_BYTES, Tuner, candidate_space,
+                     time_candidate, tune_shape, tune_shapes)
+from .table import (MXU, TUNING_SCHEMA, TunedBlocks, TuningTable, load_table,
+                    pad_up, padded_flops, save_table, scaled_call_seconds,
+                    shape_bucket, table_key)
+
+__all__ = [
+    "TUNING_SCHEMA", "MXU", "TunedBlocks", "TuningTable",
+    "load_table", "save_table", "shape_bucket", "table_key", "pad_up",
+    "padded_flops", "scaled_call_seconds",
+    "Tuner", "candidate_space", "time_candidate", "tune_shape",
+    "tune_shapes", "BLOCK_CANDIDATES", "BLOCK_K_CANDIDATES", "ORDERS",
+    "VMEM_BUDGET_BYTES",
+]

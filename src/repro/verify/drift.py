@@ -17,6 +17,13 @@ Two legs, both meant for CI (``benchmarks/run.py --drift``):
      than ``flip_margin`` (relative seconds), so timing noise on a shared
      CI runner cannot flap the job; a genuine hardware/model change will
      clear the margin.
+
+  3. **Tuning drift** -- when the stored profile embeds a ``repro.tune``
+     ``TuningTable``, re-search each stored bucket fresh and, where the
+     fresh winner's blocks differ, re-time the *stored* winner's blocks on
+     the live machine.  A flip is reported only when the stored blocks are
+     more than ``flip_margin`` slower than the fresh winner -- the same
+     noise guard as the ranking leg, applied to kernel seconds.
 """
 from __future__ import annotations
 
@@ -110,6 +117,38 @@ def ranking_drift(mesh, stored, fresh, *,
     return rows
 
 
+def tuning_drift(stored_table, *, flip_margin: float = 0.1, reps: int = 2,
+                 max_entries: int = 4,
+                 max_candidates: int = 8) -> List[Dict]:
+    """Per-bucket re-measurement of a stored ``TuningTable``: fresh-search
+    each stored bucket (bounded by ``max_entries``/``max_candidates`` for
+    CI) and flag entries whose stored blocks have gone stale -- i.e. the
+    stored winner re-timed on the live machine is more than ``flip_margin``
+    slower than the fresh winner."""
+    from repro.tune import time_candidate, tune_shape
+
+    rows: List[Dict] = []
+    for key, entry in list(stored_table.entries)[:max_entries]:
+        dtype, bm, bn, bk = key
+        fresh = tune_shape(bm, bn, bk, dtype, reps=reps,
+                           max_candidates=max_candidates)
+        stored_blocks = (entry.block_m, entry.block_n, entry.block_k,
+                         entry.order)
+        fresh_blocks = (fresh.block_m, fresh.block_n, fresh.block_k,
+                        fresh.order)
+        flipped = False
+        margin = 0.0
+        if stored_blocks != fresh_blocks:
+            s_stored = time_candidate(bm, bn, bk, dtype, stored_blocks,
+                                      reps=reps)
+            margin = (s_stored - fresh.seconds) / max(fresh.seconds, 1e-12)
+            flipped = margin > flip_margin
+        rows.append({"bucket": (bm, bn, bk), "dtype": dtype,
+                     "stored": entry.label, "fresh": fresh.label,
+                     "flipped": flipped, "margin": margin})
+    return rows
+
+
 def check_drift(*, profile_path: Optional[str] = None,
                 num_devices: Optional[int] = None,
                 flip_margin: float = 0.1) -> Dict:
@@ -139,6 +178,8 @@ def check_drift(*, profile_path: Optional[str] = None,
                           "collectives": 0,
                           "error": f"{type(e).__name__}: {e}"})
 
+    stored = obs.load_profile(profile_path) if profile_path else None
+
     ranking: List[Dict] = []
     fresh_json = None
     if num_devices >= 4:
@@ -147,13 +188,18 @@ def check_drift(*, profile_path: Optional[str] = None,
             mesh22 = jax.make_mesh((2, 2), ("x", "y"), devices=devs[:4])
         fresh = obs.probe_links(mesh22)
         fresh_json = fresh.to_json()
-        stored = obs.load_profile(profile_path) if profile_path else None
         if stored is not None:
             ranking = ranking_drift(mesh22, stored, fresh,
                                     flip_margin=flip_margin)
 
+    tuning: List[Dict] = []
+    if stored is not None and getattr(stored, "tuning", None) is not None:
+        tuning = tuning_drift(stored.tuning, flip_margin=flip_margin)
+
     ok = all(c["ok"] for c in cells) and not any(
-        r["flipped"] for r in ranking)
+        r["flipped"] for r in ranking) and not any(
+        r["flipped"] for r in tuning)
     return {"ok": ok, "cells": cells, "ranking": ranking,
+            "tuning": tuning,
             "fresh_profile": fresh_json,
             "stored_profile_path": profile_path}

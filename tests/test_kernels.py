@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import attention_ref, mha
 from repro.kernels.matmul import matmul, matmul_ref, zorder_matmul
@@ -40,6 +41,22 @@ class TestZOrderMatmul:
             bm, bn, bk = default_blocks(*dims)
             assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
             assert vmem_working_set_bytes(bm, bn, bk) < 128 * 1024 * 1024
+
+    @settings(max_examples=60, deadline=None)
+    @given(dims=st.tuples(st.sampled_from([128, 512, 4096, 32768]),
+                          st.sampled_from([128, 512, 4096, 32768]),
+                          st.sampled_from([128, 512, 4096, 32768])),
+           dtype_bytes=st.sampled_from([1, 2, 4]),
+           out_dtype_bytes=st.sampled_from([2, 4]))
+    def test_default_blocks_fit_vmem_any_dtype(self, dims, dtype_bytes,
+                                               out_dtype_bytes):
+        """The heuristic must fit the VMEM budget at the ACTUAL operand and
+        output byte widths, not the bf16 defaults -- fp32 operands halve
+        the feasible block space."""
+        bm, bn, bk = default_blocks(*dims, dtype_bytes, out_dtype_bytes)
+        assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+        assert vmem_working_set_bytes(
+            bm, bn, bk, dtype_bytes, out_dtype_bytes) < 128 * 1024 * 1024
 
     def test_tiny_fallback(self):
         a = jax.random.normal(jax.random.PRNGKey(4), (8, 16), jnp.float32)
